@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: records + CSV output + anchor comparison."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    name: str
+    value: float
+    unit: str = ""
+    paper: Optional[float] = None
+
+    @property
+    def rel_err(self) -> Optional[float]:
+        if self.paper in (None, 0):
+            return None
+        return abs(self.value - self.paper) / abs(self.paper)
+
+    def csv(self) -> str:
+        p = "" if self.paper is None else f"{self.paper:.6g}"
+        e = "" if self.rel_err is None else f"{self.rel_err:.3f}"
+        return f"{self.bench},{self.name},{self.value:.6g},{self.unit},{p},{e}"
+
+
+HEADER = "bench,name,value,unit,paper_anchor,rel_err"
+
+
+def emit(rows: List[Row], *, save_as: Optional[str] = None) -> None:
+    for r in rows:
+        print(r.csv())
+    if save_as:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, save_as), "w") as fh:
+            json.dump([dataclasses.asdict(r) for r in rows], fh, indent=1)

@@ -1,0 +1,68 @@
+"""Sec IV.C: dual-input vehicle classification across three devices
+(N2 + N270 endpoints, i7 server). Paper: 49 ms on N270, 154 ms on N2,
+157 ms on the server (pipelined steady-state per-frame busy times)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import Mapping, PlatformModel, paper_platform, synthesize
+from repro.core import calibration as cal
+from repro.models.cnn import dual_input_vehicle_graph
+
+
+def run() -> List[Row]:
+    g = dual_input_vehicle_graph()
+    # build the paper's three-device platform: N2 + N270 + i7
+    pg = paper_platform("N2", "ethernet")
+    n2 = pg.units["endpoint"]
+    pg270 = paper_platform("N270", "ethernet")
+    from repro.core.mapping import Link, PlatformGraph, ProcessingUnit
+    plat = PlatformGraph("dual")
+    plat.add_unit(ProcessingUnit("n2", n2.kind, n2.flops, n2.mem_bandwidth,
+                                 n2.firing_overhead_s))
+    n270 = pg270.units["endpoint"]
+    plat.add_unit(ProcessingUnit("n270", n270.kind, n270.flops,
+                                 n270.mem_bandwidth, n270.firing_overhead_s))
+    srv = pg.units["server"]
+    plat.add_unit(ProcessingUnit("server", srv.kind, srv.flops,
+                                 srv.mem_bandwidth, srv.firing_overhead_s))
+    eth = pg.links[frozenset(("endpoint", "server"))]
+    plat.add_link(Link("n2", "server", eth.bandwidth, eth.latency_s))
+    plat.add_link(Link("n270", "server", eth.bandwidth, eth.latency_s))
+
+    assignment = {"Input.1": "n2", "L1.1": "n2", "L2.1": "n2", "L3.1": "n2",
+                  "Input.2": "n270", "L1.2": "server", "L2.2": "server",
+                  "L3.2": "server", "L4L5": "server"}
+    prog = synthesize(g, Mapping("dual", assignment, plat))
+    model = PlatformModel(plat)
+
+    def unit_busy(unit: str) -> float:
+        compute = sum(model.actor_time_s(unit, a)
+                      for a in g.actors.values()
+                      if assignment[a.name] == unit)
+        tx = sum(model.transfer_bw_time_s(c.src_unit, c.dst_unit,
+                                          c.token_bytes)
+                 for c in prog.channels if c.src_unit == unit)
+        return compute + tx
+
+    # Structural validation is exact (2 boundary channels, 3 stages, the
+    # fan-in join). The paper's absolute per-device times (49/154/157 ms)
+    # are NOT derivable from its published device constants: they exceed
+    # the single-input N2 pipeline time (19 ms) by ~8x, implying
+    # synchronization / frame-sync stalls Sec IV.C does not specify. We
+    # therefore report the modeled busy times without anchors and record
+    # one derivable consistency check: the paper's N2 and server times are
+    # nearly equal (154 vs 157), and so are our modeled busy-time shares
+    # once both instances run in lockstep. See EXPERIMENTS.md §Dual-input.
+    rows = [
+        Row("dual_input", "n2_busy_ms", unit_busy("n2") * 1e3, "ms"),
+        Row("dual_input", "server_busy_ms", unit_busy("server") * 1e3, "ms"),
+        Row("dual_input", "n270_busy_ms", unit_busy("n270") * 1e3, "ms"),
+        Row("dual_input", "n2_vs_server_busy_ratio",
+            unit_busy("n2") / (unit_busy("server") + unit_busy("n270")), "",
+            paper=154.0 / 157.0),
+        Row("dual_input", "channels", len(prog.channels), "n", paper=2),
+        Row("dual_input", "stages", len(prog.stages), "n", paper=3),
+    ]
+    return rows

@@ -1,0 +1,34 @@
+"""Fig 4: vehicle-classification endpoint inference time on N2-i7 at every
+partition point, Ethernet + WiFi, vs the paper's anchors."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import Explorer, paper_platform
+from repro.core import calibration as cal
+from repro.models.cnn import vehicle_graph
+
+
+def run() -> List[Row]:
+    g = vehicle_graph()
+    rows: List[Row] = []
+    for link in ("ethernet", "wifi"):
+        res = Explorer(g, paper_platform("N2", link)).evaluate_modeled()
+        for rec in res.records:
+            rows.append(Row("fig4", f"n2_{link}_pp{rec.pp}",
+                            rec.endpoint_time_s * 1e3, "ms"))
+        best = res.best(privacy=True)
+        rows.append(Row("fig4", f"n2_{link}_best_pp", best.pp, "pp",
+                        paper=3))
+        rows.append(Row(
+            "fig4", f"n2_{link}_best_ms", best.endpoint_time_s * 1e3, "ms",
+            paper=cal.PAPER_ANCHORS[f"vehicle_n2_pp3_{link}"] * 1e3))
+    eth = Explorer(g, paper_platform("N2", "ethernet")).evaluate_modeled()
+    rows.append(Row("fig4", "n2_full_endpoint_ms",
+                    eth.full_endpoint().endpoint_time_s * 1e3, "ms",
+                    paper=cal.PAPER_ANCHORS["vehicle_n2_full_endpoint"] * 1e3))
+    rows.append(Row("fig4", "n2_raw_offload_ethernet_ms",
+                    eth.records[0].endpoint_time_s * 1e3, "ms",
+                    paper=cal.PAPER_ANCHORS["vehicle_n2_pp1_ethernet"] * 1e3))
+    return rows

@@ -1,0 +1,31 @@
+"""Fig 5: vehicle classification on N270-i7 (single-core Atom endpoint)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import Explorer, paper_platform
+from repro.core import calibration as cal
+from repro.models.cnn import vehicle_graph
+
+
+def run() -> List[Row]:
+    g = vehicle_graph()
+    rows: List[Row] = []
+    for link in ("ethernet", "wifi"):
+        res = Explorer(g, paper_platform("N270", link)).evaluate_modeled()
+        for rec in res.records:
+            rows.append(Row("fig5", f"n270_{link}_pp{rec.pp}",
+                            rec.endpoint_time_s * 1e3, "ms"))
+        best = res.best(privacy=True)
+        rows.append(Row("fig5", f"n270_{link}_best_pp", best.pp, "pp",
+                        paper=2))
+        rows.append(Row(
+            "fig5", f"n270_{link}_best_ms", best.endpoint_time_s * 1e3, "ms",
+            paper=cal.PAPER_ANCHORS[f"vehicle_n270_pp2_{link}"] * 1e3))
+    eth = Explorer(g, paper_platform("N270", "ethernet")).evaluate_modeled()
+    rows.append(Row(
+        "fig5", "n270_full_endpoint_ms",
+        eth.full_endpoint().endpoint_time_s * 1e3, "ms",
+        paper=cal.PAPER_ANCHORS["vehicle_n270_full_endpoint"] * 1e3))
+    return rows

@@ -1,0 +1,50 @@
+"""Fig 6: SSD-Mobilenet object tracking on N2-i7 — the paper's headline
+5.8x collaborative-inference speedup."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import Explorer, paper_platform
+from repro.core import calibration as cal
+from repro.models.cnn import partition_point_after, ssd_mobilenet_graph
+
+
+def run() -> List[Row]:
+    g = ssd_mobilenet_graph()
+    rows: List[Row] = []
+    res_by_link = {}
+    for link in ("ethernet", "wifi"):
+        res = Explorer(g, paper_platform("N2", link,
+                                         workload="ssd")).evaluate_modeled()
+        res_by_link[link] = res
+        for rec in res.records:
+            rows.append(Row("fig6", f"ssd_{link}_pp{rec.pp}",
+                            rec.endpoint_time_s * 1e3, "ms"))
+    eth = res_by_link["ethernet"]
+    full = eth.full_endpoint().endpoint_time_s
+    rows.append(Row("fig6", "ssd_full_endpoint_ms", full * 1e3, "ms",
+                    paper=cal.PAPER_ANCHORS["ssd_n2_full_endpoint"] * 1e3))
+    # the paper's reported cut: Input..DWCL9 on the endpoint
+    pp_paper = partition_point_after(g, "DWCL9")
+    at_cut = eth.records[pp_paper - 1]
+    rows.append(Row("fig6", "ssd_at_paper_cut_ms",
+                    at_cut.endpoint_time_s * 1e3, "ms",
+                    paper=cal.PAPER_ANCHORS["ssd_n2_best_ethernet"] * 1e3))
+    rows.append(Row("fig6", "ssd_speedup_at_paper_cut",
+                    full / at_cut.endpoint_time_s, "x",
+                    paper=cal.PAPER_ANCHORS["ssd_speedup"]))
+    # our explorer's own optimum lies earlier on the same 739328-B token
+    # plateau (DWCL6..DWCL9 are within the model's resolution) — reported
+    # without an anchor as a model finding, see EXPERIMENTS.md.
+    best = eth.best(privacy=True)
+    rows.append(Row("fig6", "ssd_model_best_ms",
+                    best.endpoint_time_s * 1e3, "ms"))
+    rows.append(Row("fig6", "ssd_model_best_boundary_bytes",
+                    best.boundary_bytes, "B", paper=739328))
+    wifi = res_by_link["wifi"]
+    at_cut_w = wifi.records[partition_point_after(g, "DWCL9") - 1]
+    rows.append(Row("fig6", "ssd_wifi_at_paper_region_ms",
+                    at_cut_w.endpoint_time_s * 1e3, "ms",
+                    paper=cal.PAPER_ANCHORS["ssd_n2_best_wifi"] * 1e3))
+    return rows

@@ -1,0 +1,32 @@
+"""Sec IV.D: single-image end-to-end latency with the feedback socket —
+31.2 ms total, split 57% endpoint / 23% network / 20% server."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import PlatformModel, paper_platform
+from repro.core import calibration as cal
+from repro.models.cnn import vehicle_graph
+
+
+def run() -> List[Row]:
+    g = vehicle_graph()
+    model = PlatformModel(paper_platform("N2", "ethernet"))
+    order = g.topo_order()
+    ep_actors, sv_actors = order[:3], order[3:]
+    cold = cal.N2_COLD_START_FACTOR     # single-frame runs cache-cold
+    ep = sum(model.actor_time_s("endpoint", a) for a in ep_actors) * cold
+    tx = model.transfer_time_s("endpoint", "server", 73728)
+    sv = sum(model.actor_time_s("server", a) for a in sv_actors)
+    total = ep + tx + sv
+    a = cal.PAPER_ANCHORS
+    return [
+        Row("latency", "e2e_ms", total * 1e3, "ms", paper=a["latency_e2e"] * 1e3),
+        Row("latency", "endpoint_frac", ep / total, "",
+            paper=a["latency_split"][0]),
+        Row("latency", "network_frac", tx / total, "",
+            paper=a["latency_split"][1]),
+        Row("latency", "server_frac", sv / total, "",
+            paper=a["latency_split"][2]),
+    ]

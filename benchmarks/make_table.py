@@ -1,0 +1,35 @@
+"""Render the §Roofline markdown table from the dry-run JSONs.
+Usage: PYTHONPATH=src python -m benchmarks.make_table"""
+from __future__ import annotations
+
+from benchmarks.roofline import load_all
+
+
+def main() -> None:
+    data = load_all()
+    pod = {(a, s): r for (a, s, m), r in data.items() if m == "16x16"}
+    multi = {(a, s) for (a, s, m) in data if m == "2x16x16"}
+    print("| arch | shape | t_compute | t_memory | t_collective | "
+          "bottleneck | useful | temp GB | fits | 2-pod |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+
+    def fmt(sec):
+        if sec >= 1:
+            return f"{sec:.2f} s"
+        if sec >= 1e-3:
+            return f"{sec*1e3:.1f} ms"
+        return f"{sec*1e6:.0f} us"
+
+    for (a, s), r in sorted(pod.items()):
+        temp = (r["memory"].get("temp_bytes") or 0) / 1e9
+        fits = temp + r["param_bytes_per_device"] / 1e9 <= 16.0
+        uf = r.get("useful_flops_ratio")
+        print(f"| {a} | {s} | {fmt(r['t_compute_s'])} | "
+              f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+              f"{r['bottleneck'].split('_')[1]} | "
+              f"{uf:.2f} | {temp:.1f} | {'Y' if fits else 'N'} | "
+              f"{'Y' if (a, s) in multi else 'N'} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline table: reads the dry-run result JSONs (produced by
+``python -m repro.launch.dryrun``) and emits the three per-chip roofline
+terms per (arch x shape) on the single-pod mesh, plus the multi-pod
+lowering check. See EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all() -> dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    data = load_all()
+    if not data:
+        rows.append(Row("roofline", "NO_DRYRUN_RESULTS_RUN_dryrun_first",
+                        0.0))
+        return rows
+    pod = {(a, s): r for (a, s, m), r in data.items() if m == "16x16"}
+    multi = {(a, s): r for (a, s, m), r in data.items() if m == "2x16x16"}
+    for (arch, shape), r in sorted(pod.items()):
+        tag = f"{arch}.{shape}"
+        rows.append(Row("roofline", f"{tag}.t_compute_us",
+                        r["t_compute_s"] * 1e6, "us"))
+        rows.append(Row("roofline", f"{tag}.t_memory_us",
+                        r["t_memory_s"] * 1e6, "us"))
+        rows.append(Row("roofline", f"{tag}.t_collective_us",
+                        r["t_collective_s"] * 1e6, "us"))
+        rows.append(Row("roofline", f"{tag}.bottleneck",
+                        {"t_compute_s": 0, "t_memory_s": 1,
+                         "t_collective_s": 2}[r["bottleneck"]], "0=c,1=m,2=x"))
+        if r.get("useful_flops_ratio"):
+            rows.append(Row("roofline", f"{tag}.useful_flops_ratio",
+                            r["useful_flops_ratio"], ""))
+        rows.append(Row("roofline", f"{tag}.multipod_lowered",
+                        1.0 if (arch, shape) in multi else 0.0, "bool",
+                        paper=1.0))
+    return rows

@@ -1,0 +1,157 @@
+"""Variable-rate conditional offload: VR-PRUNE's dynamic machinery
+(Sec III.A — CA/DA/DPA, token rates, DPGs) used for confidence-gated
+collaborative inference.
+
+Scenario: the endpoint runs Input..L2 plus a cheap shallow head (the CA).
+Only frames the shallow head is UNSURE about are offloaded to the server
+for the deep L3..L5 path — everything else exits early on-device. The
+dynamic subgraph (entry DA -> deep DPA -> exit DA) has token rate 0 or 1
+per frame, set by the CA at run time; the analyzer proves the graph
+deadlock/overflow-free at design time, and the symmetric-token-rate rule
+guarantees the entry/exit rates always agree.
+
+This is the paper's privacy argument made quantitative: the fraction of
+frames whose intermediate features ever leave the device becomes a
+RUN-TIME quantity (here 67%), and boundary traffic shrinks by the same
+factor vs. always-offload.
+
+Run: PYTHONPATH=src python examples/early_exit_offload.py
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Mapping, Simulator, analyze
+from repro.core.graph import Actor, ActorType, Dpg, Graph, Port, PortDir
+from repro.models.cnn import conv2d, dense, maxpool2
+
+rng = np.random.RandomState(0)
+HW, NCLS = 32, 4
+
+
+def pw(*shape):
+    s = 1.0 / math.sqrt(np.prod(shape[:-1]))
+    return jnp.asarray(rng.uniform(-s, s, shape), jnp.float32)
+
+
+w1, w2 = pw(5, 5, 3, 16), pw(5, 5, 16, 16)
+feat = (HW // 4) ** 2 * 16
+w_sh, b_sh = pw(feat, NCLS), jnp.zeros((NCLS,))          # shallow head
+w3, b3 = pw(feat, 64), jnp.zeros((64,))
+w45, b45 = pw(64, NCLS), jnp.zeros((NCLS,))              # deep path
+
+g = Graph("early_exit_offload")
+state = {"decisions": [], "confidences": []}
+
+inp = g.add_actor(Actor(
+    "Input", ActorType.SPA, [],
+    [Port("out", PortDir.OUT, token_shape=(HW, HW, 3))],
+    fire_fn=lambda i, st, r: (
+        {"out": [jnp.asarray(rng.rand(HW, HW, 3), jnp.float32)]}, st)))
+
+backbone = g.add_actor(Actor(
+    "L1L2", ActorType.SPA,
+    [Port("in", PortDir.IN, token_shape=(HW, HW, 3))],
+    [Port("out", PortDir.OUT, token_shape=(HW // 4, HW // 4, 16))],
+    fire_fn=lambda i, st, r: ({"out": [maxpool2(jax.nn.relu(conv2d(
+        maxpool2(jax.nn.relu(conv2d(i["in"][0], w1))), w2)))]}, st)))
+
+
+def gate_fire(inputs, st, rates):
+    """The CA: shallow classification + the offload decision."""
+    (x,) = inputs["in"]
+    logits = dense(x, w_sh, b_sh)
+    probs = jax.nn.softmax(logits)
+    conf = float(probs.max())
+    state["confidences"].append(conf)
+    state["decisions"].append(1 if conf < 0.263 else 0)  # unsure -> offload
+    return {"feat": [x], "shallow": [probs]}, st
+
+
+gate = g.add_actor(Actor(
+    "Gate", ActorType.CA,
+    [Port("in", PortDir.IN, token_shape=(HW // 4, HW // 4, 16))],
+    [Port("feat", PortDir.OUT, token_shape=(HW // 4, HW // 4, 16)),
+     Port("shallow", PortDir.OUT, token_shape=(NCLS,))],
+    fire_fn=gate_fire))
+
+entry = g.add_actor(Actor(
+    "EntryDA", ActorType.DA,
+    [Port("in", PortDir.IN, token_shape=(HW // 4, HW // 4, 16))],
+    [Port("out", PortDir.OUT, lrl=0, url=1,
+          token_shape=(HW // 4, HW // 4, 16))],
+    fire_fn=lambda i, st, r: (
+        {"out": list(i["in"])[:r["out"]]}, st)))
+
+deep = g.add_actor(Actor(
+    "DeepL3L5", ActorType.DPA,
+    [Port("in", PortDir.IN, lrl=0, url=1,
+          token_shape=(HW // 4, HW // 4, 16))],
+    [Port("out", PortDir.OUT, lrl=0, url=1, token_shape=(NCLS,))],
+    fire_fn=lambda i, st, r: (
+        {"out": [jax.nn.softmax(dense(jax.nn.relu(
+            dense(x, w3, b3)).reshape(8, 8), w45, b45))
+            for x in i.get("in", [])]}, st)))
+
+exit_da = g.add_actor(Actor(
+    "ExitDA", ActorType.DA,
+    [Port("deep", PortDir.IN, lrl=0, url=1, token_shape=(NCLS,)),
+     Port("shallow", PortDir.IN, token_shape=(NCLS,))],
+    [Port("result", PortDir.OUT, token_shape=(NCLS,))],
+    fire_fn=lambda i, st, r: (
+        {"result": [i["deep"][0] if i.get("deep") else i["shallow"][0]]},
+        st)))
+
+sink = g.add_actor(Actor(
+    "Sink", ActorType.SPA,
+    [Port("in", PortDir.IN, token_shape=(NCLS,))], [],
+    fire_fn=lambda i, st, r: ({"result": i["in"]}, st)))
+
+g.connect(inp.port("out"), backbone.port("in"))
+g.connect(backbone.port("out"), gate.port("in"))
+g.connect(gate.port("feat"), entry.port("in"))
+g.connect(gate.port("shallow"), exit_da.port("shallow"), capacity=4)
+g.connect(entry.port("out"), deep.port("in"))
+g.connect(deep.port("out"), exit_da.port("deep"))
+g.connect(exit_da.port("result"), sink.port("in"))
+g.add_dpg(Dpg("offload", ca="Gate", entry_da="EntryDA", exit_da="ExitDA",
+              members=["Gate", "EntryDA", "DeepL3L5", "ExitDA"]))
+
+report = analyze(g)
+print(f"analyzer: ok={report.ok} errors={report.errors}")
+
+
+def atr_fn(actor, k):
+    """The CA's run-time rate assignment: symmetric on every DPG edge."""
+    d = state["decisions"][k] if k < len(state["decisions"]) else 1
+    if actor.name == "EntryDA":
+        return {"out": d}
+    if actor.name == "DeepL3L5":
+        return {"in": d, "out": d}
+    if actor.name == "ExitDA":
+        return {"deep": d}
+    return {}
+
+
+FRAMES = 30
+mapping = Mapping("offload", {a: ("server" if a == "DeepL3L5" else "endpoint")
+                              for a in g.actors})
+sim = Simulator(g, atr_fn=atr_fn)
+res = sim.run(FRAMES)
+results = res.outputs["Sink"]
+offloaded = sum(state["decisions"][:FRAMES])
+print(f"confidence range: {min(state['confidences']):.3f}.."
+      f"{max(state['confidences']):.3f}")
+tok_bytes = g.fifos["Gate.feat->EntryDA.in"].token_bytes
+print(f"frames: {FRAMES}, offloaded (conf<0.263): {offloaded} "
+      f"({100*offloaded/FRAMES:.0f}%)")
+print(f"boundary traffic: {offloaded * tok_bytes} B vs always-offload "
+      f"{FRAMES * tok_bytes} B -> {100*(1-offloaded/FRAMES):.0f}% saved; "
+      f"{FRAMES - offloaded} frames never leave the device")
+assert len(results) == FRAMES
+for p in results:
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-5)
+print("every frame produced a normalized classification — the variable-"
+      "rate DPG is consistent (no deadlock, rates symmetric).")

@@ -1,0 +1,56 @@
+"""The Edge-PRUNE Explorer applied to a modern LLM: export a transformer
+as a VR-PRUNE actor graph, generate the paper's artifact set (per-
+partition-point mapping-file pairs + profiling script), and sweep the
+pod-boundary partition points on the TPU platform model.
+
+This is Sec III.C's methodology with a decoder LM instead of a CNN: the
+partition point is where the activation token crosses from pod0 ("the
+endpoint") to pod1 ("the server") over DCN.
+
+Run: PYTHONPATH=src python examples/partition_explorer.py [--arch gemma3_1b]
+"""
+import argparse
+import os
+import tempfile
+
+from repro.configs import get_config
+from repro.core import Explorer, analyze, tpu_pod_platform
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--group-size", type=int, default=2,
+                    help="transformer layers per dataflow actor")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    g = T.to_actor_graph(cfg, None, batch=args.batch, seq=args.seq,
+                         group_size=args.group_size)
+    print(f"{cfg.name} as dataflow graph: {g}")
+    print(f"analyzer: ok={analyze(g).ok}")
+
+    platform = tpu_pod_platform(2)   # pod0 = 'endpoint', pod1 = 'server'
+    explorer = Explorer(g, platform)
+    outdir = os.path.join(tempfile.gettempdir(), f"edgeprune_{cfg.name}")
+    artifacts = explorer.generate_artifacts(outdir)
+    print(f"wrote {len(artifacts)} mapping files + profiling script "
+          f"to {outdir}")
+
+    res = explorer.evaluate_modeled()
+    print(f"{'pp':>4} {'pod0 time':>12} {'boundary':>12}")
+    for rec in res.records:
+        print(f"{rec.pp:>4} {rec.endpoint_time_s*1e6:>10.1f}us "
+              f"{rec.boundary_bytes:>10d}B  "
+              f"{'<- best' if rec.pp == res.best(privacy=True).pp else ''}")
+    print(f"\nEvery interior cut ships the same (B, S, d_model) activation "
+          f"token, so on homogeneous pods the Explorer's optimum is set by "
+          f"the compute split — unlike the paper's CNNs whose token sizes "
+          f"shrink with depth. See EXPERIMENTS.md §Pod-boundary.")
+
+
+if __name__ == "__main__":
+    main()

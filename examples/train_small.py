@@ -1,0 +1,74 @@
+"""End-to-end training driver: train a small decoder LM for a few hundred
+steps on the synthetic bigram LM stream and show the loss dropping toward
+the process entropy; finish with a checkpoint + restore + greedy sample.
+
+Run: PYTHONPATH=src python examples/train_small.py [--steps 300]
+(Use --d-model 768 --layers 12 for a ~100M-param run on real hardware.)
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import checkpoint, data, optim
+from repro.runtime.serving import Request, ServeEngine
+from repro.runtime.trainstep import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="train-small", arch_type="dense", n_layers=args.layers,
+        d_model=args.d_model, n_heads=max(args.d_model // 32, 2),
+        n_kv_heads=max(args.d_model // 64, 1), d_ff=args.d_model * 4,
+        vocab_size=512, dtype="float32", param_dtype="float32",
+        attn_chunk=32, remat=False)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.init(params)
+    oc = optim.AdamWConfig(lr=3e-3, warmup_steps=30, total_steps=args.steps,
+                           weight_decay=0.01)
+    step = jax.jit(make_train_step(cfg, oc), donate_argnums=(0, 1))
+    gen = data.lm_batches(args.batch, args.seq, cfg.vocab_size, seed=0)
+    t0 = time.time()
+    first = last = None
+    for i, batch in zip(range(args.steps), gen):
+        params, opt, m = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in batch.items()})
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first * 0.8 else 'no progress?'})")
+
+    path = os.path.join(tempfile.gettempdir(), "train_small.npz")
+    checkpoint.save(path, params, meta={"steps": args.steps})
+    restored = checkpoint.restore(path, jax.eval_shape(lambda: params))
+    print(f"checkpoint round-trip ok -> {path}")
+
+    eng = ServeEngine(cfg, restored, max_len=args.seq + 16)
+    prompt = next(data.lm_batches(1, 16, cfg.vocab_size, seed=9))["tokens"][0]
+    out = eng.generate([Request(0, prompt, max_new_tokens=12)])[0]
+    print(f"sampled continuation of trained model: {out.tokens}")
+
+
+if __name__ == "__main__":
+    main()

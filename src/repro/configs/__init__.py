@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` lookup for the 10 assigned
+architectures (+ the paper's own CNN graphs, exposed via models.cnn).
+
+Every config cites its source in its module docstring. ``get_config``
+returns the full production ModelConfig; ``get_config(name).smoke()``
+returns the reduced same-family variant used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "seamless_m4t_medium",
+    "qwen2_moe_a2_7b",
+    "llava_next_mistral_7b",
+    "recurrentgemma_9b",
+    "gemma3_1b",
+    "llama3_2_3b",
+    "qwen3_moe_235b_a22b",
+    "qwen2_1_5b",
+    "xlstm_350m",
+    "chatglm3_6b",
+]
+
+_ALIASES = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gemma3-1b": "gemma3_1b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "xlstm-350m": "xlstm_350m",
+    "chatglm3-6b": "chatglm3_6b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,99 @@
+"""The four assigned input shapes and per-(arch, shape) input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input — weak-type-correct, shardable, zero allocation — which is what the
+multi-pod dry-run lowers against.
+
+Shape semantics:
+  train_4k     seq 4096,   global_batch 256 — train_step
+  prefill_32k  seq 32768,  global_batch 32  — prefill_step (prompt pass)
+  decode_32k   seq 32768,  global_batch 128 — serve_step (1 token, full cache)
+  long_500k    seq 524288, global_batch 1   — serve_step, sub-quadratic only
+
+long_500k eligibility: archs with at least one non-global-attention
+mechanism (recurrent state or sliding window) run it — the global layers
+of gemma3 are O(L) per decode step and its windowed layers bound 5/6 of
+the cache; pure full-attention archs are skipped (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    return any(k != "attn" for k in cfg.layer_kinds)
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return supports_long_context(cfg)
+    return True
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch_override: Optional[int] = None) -> Dict[str, object]:
+    """Model-input ShapeDtypeStructs for (arch, shape).
+
+    train/prefill return the batch dict consumed by forward()/prefill();
+    decode returns {"token", "cache_len"} — the cache spec comes from
+    ``jax.eval_shape(init_cache, ...)`` in the launcher (it is state, not
+    input, and its shape follows the config + context length).
+    """
+    s = SHAPES[shape]
+    b = batch_override or s.global_batch
+    seq = s.seq_len
+
+    if s.kind in ("train", "prefill"):
+        specs: Dict[str, object] = {}
+        if cfg.arch_type == "vlm":
+            ft = cfg.frontend_tokens
+            specs["embeds"] = _f32(b, ft, cfg.frontend_dim)
+            specs["tokens"] = _i32(b, seq - ft)
+        elif cfg.arch_type == "audio":
+            # encoder consumes seq frames; decoder consumes seq tokens
+            specs["embeds"] = _f32(b, seq, cfg.frontend_dim)
+            specs["tokens"] = _i32(b, seq)
+        else:
+            specs["tokens"] = _i32(b, seq)
+        if s.kind == "train":
+            specs["labels"] = _i32(b, seq)
+        return specs
+
+    return {"token": _i32(b), "cache_len": _i32(b)}
+
+
+def decode_context(cfg: ModelConfig, shape: str) -> Dict[str, int]:
+    """Cache geometry for decode shapes: max context + encoder src length."""
+    s = SHAPES[shape]
+    src = s.seq_len if cfg.arch_type == "audio" else 0
+    return {"batch": s.global_batch, "max_len": s.seq_len, "src_len": src}

@@ -1,0 +1,34 @@
+"""VR-PRUNE dataflow model of computation + Edge-PRUNE toolchain.
+
+Public API::
+
+    from repro.core import (
+        Graph, Actor, Port, Fifo, ActorType, PortDir, Dpg,
+        analyze, repetition_vector,
+        Simulator, Mapping, PlatformGraph, PlatformModel,
+        synthesize, StagedProgram, Explorer,
+    )
+"""
+from repro.core.graph import (Actor, ActorType, Dpg, Fifo, Graph, Port,
+                              PortDir, fifo, parent)
+from repro.core.analyzer import AnalysisReport, analyze, repetition_vector
+from repro.core.simulator import SimResult, Simulator
+from repro.core.mapping import (Link, Mapping, PlatformGraph, PlatformModel,
+                                ProcessingUnit, paper_platform,
+                                tpu_pod_platform)
+from repro.core.synthesis import (Channel, Stage, StagedProgram, StageFn,
+                                  compile_local_step, read_mapping_file,
+                                  synthesize, write_mapping_file)
+from repro.core.explorer import ExplorationResult, Explorer, PartitionRecord
+
+__all__ = [
+    "Actor", "ActorType", "Dpg", "Fifo", "Graph", "Port", "PortDir",
+    "fifo", "parent",
+    "AnalysisReport", "analyze", "repetition_vector",
+    "SimResult", "Simulator",
+    "Link", "Mapping", "PlatformGraph", "PlatformModel", "ProcessingUnit",
+    "paper_platform", "tpu_pod_platform",
+    "Channel", "Stage", "StagedProgram", "StageFn", "compile_local_step",
+    "read_mapping_file", "synthesize", "write_mapping_file",
+    "ExplorationResult", "Explorer", "PartitionRecord",
+]

@@ -1,0 +1,223 @@
+"""Code synthesis: graph + mapping -> executable staged program (Sec III.B-C).
+
+The Edge-PRUNE compiler takes the application graph, actor behaviours, the
+platform graph and a mapping file, and synthesizes a top-level application
+per device; TX/RX FIFOs are inserted automatically wherever an edge crosses
+the device boundary, so the application graph itself never changes.
+
+This module is the JAX analogue:
+
+* ``split(graph, mapping)`` — partition the actor set by processing unit
+  and derive the boundary *channels* (the TX/RX FIFO pairs). Pure graph
+  transformation, no jax.
+* ``StagedProgram`` — an executable distributed program: one ``StageFn``
+  per processing unit (a topologically-fused composition of that unit's
+  actor fire functions, jit-compatible when the fire functions are pure
+  JAX), plus channel metadata. ``run_local`` executes the stages in
+  precedence order in-process (functionally identical to distributed
+  execution; the channels become array hand-offs). On a TPU mesh the same
+  channels lower to ``jax.lax.ppermute`` across the ``pod`` axis — see
+  ``repro.launch.pipeline``.
+* ``write_mapping_file`` / ``read_mapping_file`` — the paper's on-disk
+  mapping-file workflow (the Explorer emits one pair per partition point).
+
+Restriction (same as the paper's synthesis path): the synthesized *staged*
+program assumes single-rate (HSDF) behaviour per iteration — every actor
+fires once per graph iteration with atr == url == lrl == 1 on every port.
+Multi-rate and variable-rate graphs are executed by the token-accurate
+``Simulator``; DNN inference graphs (the paper's and ours) are single-rate.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.graph import Actor, Fifo, Graph
+from repro.core.mapping import Mapping
+
+
+@dataclass(frozen=True)
+class Channel:
+    """A synthesis-inserted TX/RX FIFO pair crossing a unit boundary."""
+
+    name: str
+    src_unit: str
+    dst_unit: str
+    src_actor: str
+    src_port: str
+    dst_actor: str
+    dst_port: str
+    token_shape: Tuple[int, ...]
+    token_dtype: str
+    token_bytes: int
+
+
+@dataclass
+class Stage:
+    """All actors mapped to one processing unit, in precedence order."""
+
+    unit: str
+    actors: List[Actor]
+    # Channels whose dst is in this stage (RX) / src is in this stage (TX).
+    rx: List[Channel] = field(default_factory=list)
+    tx: List[Channel] = field(default_factory=list)
+
+
+def split(g: Graph, mapping: Mapping) -> Tuple[List[Stage], List[Channel]]:
+    """Partition ``g`` by the mapping; derive boundary channels.
+
+    Stages are ordered so that every channel flows from an earlier stage to
+    a later one when possible (pipeline order). Cyclic unit dependencies
+    (legal in the MoC via delay tokens) keep declaration order.
+    """
+    order = g.topo_order()
+    units_in_order: List[str] = []
+    for a in order:
+        u = mapping.unit_of(a.name)
+        if u not in units_in_order:
+            units_in_order.append(u)
+    stages = {u: Stage(unit=u, actors=[]) for u in units_in_order}
+    for a in order:
+        stages[mapping.unit_of(a.name)].actors.append(a)
+
+    channels: List[Channel] = []
+    for f in mapping.boundary_edges(g):
+        su = mapping.unit_of(f.src.actor.name)
+        du = mapping.unit_of(f.dst.actor.name)
+        ch = Channel(
+            name=f"ch:{f.name}", src_unit=su, dst_unit=du,
+            src_actor=f.src.actor.name, src_port=f.src.name,
+            dst_actor=f.dst.actor.name, dst_port=f.dst.name,
+            token_shape=f.src.token_shape, token_dtype=f.src.token_dtype,
+            token_bytes=f.token_bytes)
+        channels.append(ch)
+        stages[su].tx.append(ch)
+        stages[du].rx.append(ch)
+    return [stages[u] for u in units_in_order], channels
+
+
+class StageFn:
+    """Executable form of one stage: fuses the stage's actor firings.
+
+    Calling convention::
+
+        outputs = stage_fn(external_inputs, rx_tokens)
+
+    ``external_inputs`` maps source-actor name -> token (for source actors
+    in this stage); ``rx_tokens`` maps channel name -> token. The return
+    is ``(tx_tokens, sink_outputs)``. The body is pure (all FIFO dynamics
+    are resolved at synthesis time for the single-rate case), hence
+    jit-compatible when actor fire functions are pure JAX.
+    """
+
+    def __init__(self, g: Graph, stage: Stage):
+        self.g = g
+        self.stage = stage
+        self.unit = stage.unit
+        self._member = {a.name for a in stage.actors}
+        # Precompute wiring: for each actor input port, where does its
+        # token come from (an intra-stage edge value or an RX channel)?
+        self._rx_by_dst = {(c.dst_actor, c.dst_port): c for c in stage.rx}
+        self._tx_by_src: Dict[Tuple[str, str], List[Channel]] = {}
+        for c in stage.tx:
+            self._tx_by_src.setdefault((c.src_actor, c.src_port), []).append(c)
+
+    def __call__(self, external_inputs: Dict[str, Any],
+                 rx_tokens: Dict[str, Any]
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        # Value environment keyed by (actor, out_port).
+        env: Dict[Tuple[str, str], Any] = {}
+        tx_out: Dict[str, Any] = {}
+        sink_out: Dict[str, Any] = {}
+        for a in self.stage.actors:
+            inputs: Dict[str, List[Any]] = {}
+            for p in a.in_ports:
+                if p.fifo is None:
+                    continue
+                key = (a.name, p.name)
+                if key in self._rx_by_dst:
+                    inputs[p.name] = [rx_tokens[self._rx_by_dst[key].name]]
+                else:
+                    src = p.fifo.src
+                    inputs[p.name] = [env[(src.actor.name, src.name)]]
+            if a.is_source and a.name in external_inputs:
+                inputs["__feed__"] = [external_inputs[a.name]]
+            rates = {p.name: 1 for p in a.in_ports + a.out_ports}
+            outputs, _ = a.fire_fn(inputs, None, rates) if a.fire_fn else ({}, None)
+            for p in a.out_ports:
+                toks = outputs.get(p.name, [])
+                if len(toks) != 1:
+                    raise ValueError(
+                        f"staged synthesis requires single-rate actors; "
+                        f"{a.name}.{p.name} produced {len(toks)} tokens")
+                env[(a.name, p.name)] = toks[0]
+                for ch in self._tx_by_src.get((a.name, p.name), []):
+                    tx_out[ch.name] = toks[0]
+            if a.is_sink and isinstance(outputs, dict) and "result" in outputs:
+                sink_out[a.name] = outputs["result"]
+        return tx_out, sink_out
+
+
+@dataclass
+class StagedProgram:
+    graph: Graph
+    mapping: Mapping
+    stages: List[Stage]
+    channels: List[Channel]
+    stage_fns: Dict[str, StageFn]
+
+    def run_local(self, external_inputs: Dict[str, Any]) -> Dict[str, Any]:
+        """Execute all stages in precedence order in-process. Functionally
+        identical to distributed execution over TX/RX channels."""
+        tokens: Dict[str, Any] = {}
+        sinks: Dict[str, Any] = {}
+        for st in self.stages:
+            fn = self.stage_fns[st.unit]
+            rx = {c.name: tokens[c.name] for c in st.rx}
+            tx, sk = fn(external_inputs, rx)
+            tokens.update(tx)
+            sinks.update(sk)
+        return sinks
+
+    def comm_bytes_per_iteration(self) -> int:
+        return sum(c.token_bytes for c in self.channels)
+
+
+def synthesize(g: Graph, mapping: Mapping) -> StagedProgram:
+    """The Edge-PRUNE 'compiler': graph + mapping -> staged program."""
+    stages, channels = split(g, mapping)
+    fns = {st.unit: StageFn(g, st) for st in stages}
+    return StagedProgram(g, mapping, stages, channels, fns)
+
+
+def compile_local_step(g: Graph) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+    """Single-unit special case: one callable running a whole iteration."""
+    mapping = Mapping("local", {n: "local" for n in g.actors})
+    prog = synthesize(g, mapping)
+    return prog.run_local
+
+
+# ---------------------------------------------------------------------------
+# Mapping files on disk (the Explorer's output format, Sec III.C)
+# ---------------------------------------------------------------------------
+
+def write_mapping_file(path: str, mapping: Mapping, *, local_unit: str) -> None:
+    """Write one platform-specific mapping file: every actor marked either
+    'local' or 'remote' relative to ``local_unit`` — mirroring the paper's
+    per-device mapping files."""
+    data = {
+        "mapping": mapping.name,
+        "local_unit": local_unit,
+        "actors": {a: ("local" if u == local_unit else "remote")
+                   for a, u in mapping.assignment.items()},
+        "units": mapping.assignment,
+    }
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+
+
+def read_mapping_file(path: str) -> Mapping:
+    with open(path) as fh:
+        data = json.load(fh)
+    return Mapping(data["mapping"], data["units"])

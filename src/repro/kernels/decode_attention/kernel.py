@@ -1,0 +1,113 @@
+"""Pallas TPU decode-attention kernel (flash-decode style).
+
+One new token per sequence attends over a (B, S, Hk, D) KV cache with a
+per-sequence valid length. Grid: (B x Hk, kv-blocks); the kv dimension is
+innermost/sequential, carrying the online-softmax state for the g query
+heads of the kv head in VMEM scratch. The per-sequence ``lengths`` array
+is a scalar-prefetch operand — Pallas TPU loads it into SMEM before the
+kernel body runs, so block masking is branch-free.
+
+This is the memory-bound kernel of serving: per step it streams the
+whole cache once (arithmetic intensity ~= g), so the roofline term is
+bytes(cache)/HBM_bw — the Pallas win over naive XLA decode is avoiding
+the (B, H, S) logits round-trip to HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bk: int, nk: int, scale: float,
+                   hk: int):
+    bh = pl.program_id(0)
+    ik = pl.program_id(1)
+    b = bh // hk
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    live = ik * bk < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            bk: int = 512, scale=None,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, Hk, D); lengths: (B,) valid entries.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, s, hk, _ = k_cache.shape
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bk = min(bk, s)
+    while s % bk:
+        bk //= 2
+    nk = s // bk
+
+    qg = q.reshape(b, hk, g, d)
+    grid = (b * hk, nk)
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, scale=scale,
+                               hk=hk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bh, ik, lens: (bh // hk, bh % hk, 0, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda bh, ik, lens: (bh // hk, ik, bh % hk, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda bh, ik, lens: (bh // hk, ik, bh % hk, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, d), lambda bh, ik, lens: (bh // hk, bh % hk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

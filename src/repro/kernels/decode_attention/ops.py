@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the decode-attention kernel (interpret mode
+on CPU, compiled Pallas on TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k_cache, v_cache, lengths, *, bk: int = 512):
+    return decode_attention_pallas(q, k_cache, v_cache, lengths, bk=bk,
+                                   interpret=_on_cpu())

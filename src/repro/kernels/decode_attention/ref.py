@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
+    """q: (B, H, D); caches: (B, S, Hk, D); lengths: (B,)."""
+    b, h, d = q.shape
+    _, s, hk, _ = k_cache.shape
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hk, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None] < lengths[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

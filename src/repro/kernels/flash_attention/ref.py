@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention: naive full-matrix softmax.
+O(S^2) memory — tests only."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale=None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hk, D) with Hk | H (GQA)."""
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hk, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the RG-LRU scan: plain lax.scan over time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_seq_ref(a, b, h0):
+    """Sequential reference. a, b: (B, S, D); h0: (B, D)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, ys = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,345 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo
+against 512 placeholder host devices, and extract the roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun ...``):
+the device-count flag below has to be set before jax initializes. Smoke
+tests and benchmarks deliberately do NOT import this module.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from functools import partial   # noqa: E402
+from typing import Dict, Optional   # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config       # noqa: E402
+from repro.configs.shapes import (SHAPES, decode_context, input_specs,  # noqa: E402
+                                  shape_applicable)
+from repro.launch import mesh as mesh_lib            # noqa: E402
+from repro.models import transformer as T            # noqa: E402
+from repro.runtime import optim                      # noqa: E402
+from repro.runtime.trainstep import (make_prefill_step, make_serve_step,  # noqa: E402
+                                     make_train_step)
+from repro.sharding import (batch_shardings, cache_shardings,  # noqa: E402
+                            params_shardings, replicated)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes extraction
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result bytes of every collective op, weighting ops inside
+    while-loop bodies by their (statically known) trip count.
+
+    HLO layout: computations are blocks ``%name (...) -> ... {`` ... ``}``.
+    A while op referencing body=%name with a known trip count shows up as
+    a comment or can be bounded by the induction variable compare; jax
+    scans lower with known trip counts, and XLA's HLO text annotates the
+    loop backend config. We conservatively read the trip count from the
+    scan length: callers pass it via the ``trip_counts`` mapping instead —
+    see ``_analyze``: the while body name is matched to the loop's
+    upper bound parsed from the ``constant`` compared in the condition.
+    """
+    # split into computations
+    comps: Dict[str, list] = {}
+    cur = None
+    comp_hdr = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+    for line in hlo_text.splitlines():
+        m = comp_hdr.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # map while-body computation -> trip count (parse condition computations)
+    # condition bodies compare the induction var against a constant:
+    #   %constant.N = s32[] constant(TRIP)
+    cond_const: Dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = []
+        has_lt = False
+        for ln in lines:
+            mc = re.search(r"s32\[\]\s+constant\((\d+)\)", ln)
+            if mc:
+                consts.append(int(mc.group(1)))
+            if "direction=LT" in ln or "compare" in ln:
+                has_lt = True
+        if has_lt and consts:
+            cond_const[name] = max(consts)
+
+    # find while ops: body=%B, condition=%C
+    body_trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            mw = re.search(r"while\(.*?\).*condition=%?([\w\.\-]+),\s*"
+                           r"body=%?([\w\.\-]+)", ln)
+            if mw:
+                c, b = mw.group(1), mw.group(2)
+                body_trip[b] = cond_const.get(c, 1)
+
+    # parent map: body computation -> computation containing its while op
+    parent: Dict[str, str] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            mw = re.search(r"body=%?([\w\.\-]+)", ln)
+            if mw and "while(" in ln:
+                parent[mw.group(1)] = name
+            # weight computations called from within a loop body too
+            mc = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", ln)
+            if mc:
+                parent.setdefault(mc.group(1), name)
+
+    def comp_weight(name: str) -> int:
+        # product of trip counts of ALL enclosing while bodies (nested
+        # grad-accumulation loop x layer scan), walking the parent chain.
+        w, cur, hops = 1, name, 0
+        while cur is not None and hops < 32:
+            w *= body_trip.get(cur, 1)
+            cur = parent.get(cur)
+            hops += 1
+        return w
+
+    out = {k: 0.0 for k in _COLL_KINDS}
+    out["count"] = 0
+    for name, lines in comps.items():
+        w = comp_weight(name)
+        for ln in lines:
+            for kind in _COLL_KINDS:
+                if re.search(rf"\)?\s{kind}(-start)?\(", ln):
+                    lhs = ln.split(" = ", 1)
+                    if len(lhs) == 2:
+                        out[kind] += w * _shape_bytes(lhs[1].split(kind)[0])
+                        out["count"] += w
+                    break
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# combo lowering
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg):
+    return jax.eval_shape(partial(T.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def lower_combo(arch: str, shape: str, *, multi_pod: bool = False,
+                cfg_override=None, microbatches: int = 1) -> Dict:
+    cfg = cfg_override or get_config(arch)
+    s = SHAPES[shape]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    params_abs = abstract_params(cfg)
+    p_shard = params_shardings(params_abs, mesh)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(specs, mesh)
+    t0 = time.time()
+
+    with mesh:
+        if s.kind == "train":
+            opt_abs = jax.eval_shape(optim.init, params_abs)
+            o_shard = {"m": p_shard, "v": p_shard,
+                       "step": replicated(opt_abs["step"], mesh)}
+            step = make_train_step(cfg, optim.AdamWConfig(), mesh,
+                                   microbatches=microbatches)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif s.kind == "prefill":
+            step = make_prefill_step(cfg, max_len=s.seq_len, mesh=mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            ctx = decode_context(cfg, shape)
+            cache_abs = jax.eval_shape(
+                partial(T.init_cache, cfg, ctx["batch"], ctx["max_len"],
+                        src_len=ctx["src_len"]))
+            c_shard = cache_shardings(cache_abs, mesh)
+            step = make_serve_step(cfg, mesh=mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, b_shard["token"],
+                              b_shard["cache_len"]),
+                out_shardings=(None, c_shard, b_shard["cache_len"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, specs["token"],
+                                   specs["cache_len"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    if microbatches > 1:
+        # XLA's HloCostAnalysis multiplies ONE level of while-loop bodies
+        # by the trip count but not nested loops: under gradient
+        # accumulation the outer microbatch loop is unaccounted. Nearly
+        # all flops/bytes live inside it, so scale by the trip count
+        # (verified: mb=4 reports exactly 1/4 of the mb=1 flops).
+        flops *= microbatches
+        bytes_acc *= microbatches
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # analytic per-device weight bytes (what the mesh actually stores)
+    def leaf_device_bytes(leaf, sh):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return n // int(np.prod([_axsize(mesh, a) for a in sh.spec]))
+
+    def _axsize(mesh, a):
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            return int(np.prod([mesh.shape[x] for x in a]))
+        return mesh.shape[a]
+
+    pleaves = jax.tree.leaves(params_abs)
+    sleaves = jax.tree.leaves(p_shard)
+    param_dev_bytes = sum(leaf_device_bytes(l, s)
+                          for l, s in zip(pleaves, sleaves))
+
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = s.global_batch * (s.seq_len if s.kind == "train" else
+                               (s.seq_len if s.kind == "prefill" else 1))
+    mult = 6 if s.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    # NOTE: compiled.cost_analysis() and the HLO text describe the SPMD
+    # *per-device* program (verified empirically: sharding a matmul over N
+    # devices divides reported flops by N). The roofline terms below are
+    # therefore "per-chip quantity / per-chip rate", which equals the
+    # spec's global/(chips*rate) formulation.
+    res = {
+        "arch": arch, "shape": shape, "microbatches": microbatches,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_flops_global": flops * n_chips,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll["total"], "collectives": coll,
+        "memory": mem, "param_bytes_per_device": param_dev_bytes,
+        "param_count": n, "active_param_count": n_active,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / (flops * n_chips) if flops else None,
+        "t_compute_s": flops / mesh_lib.PEAK_FLOPS_BF16,
+        "t_memory_s": bytes_acc / mesh_lib.HBM_BW,
+        "t_collective_s": coll["total"] / mesh_lib.ICI_BW,
+        "hlo_kb": len(hlo) // 1024,
+    }
+    terms = {k: res[k] for k in ("t_compute_s", "t_memory_s",
+                                 "t_collective_s")}
+    res["bottleneck"] = max(terms, key=terms.get)
+    return res
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, outdir: str,
+            force: bool = False, microbatches: int = 1) -> Optional[Dict]:
+    if not shape_applicable(get_config(arch), shape):
+        return None
+    mesh_tag = "multipod" if multi_pod else "pod"
+    path = os.path.join(outdir, f"{arch}__{shape}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as fh:
+            return json.load(fh)
+    res = lower_combo(arch, shape, multi_pod=multi_pod,
+                      microbatches=microbatches)
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(res, fh, indent=1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="input shape (default: all)")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--outdir", default=os.path.normpath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                if not shape_applicable(get_config(arch), shape):
+                    print(f"SKIP {tag} (long-context not applicable)")
+                    continue
+                try:
+                    t0 = time.time()
+                    r = run_one(arch, shape, mp, args.outdir, args.force,
+                                args.microbatches)
+                    print(f"OK   {tag}: flops/dev={r['hlo_flops_per_device']:.3e} "
+                          f"coll/dev={r['collective_bytes_per_device']:.3e} "
+                          f"temp={r['memory'].get('temp_bytes')} "
+                          f"bottleneck={r['bottleneck']} "
+                          f"[{time.time()-t0:.1f}s]")
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction. A FUNCTION, not a module-level constant —
+importing this module never touches jax device state.
+
+Single pod: (data=16, model=16) = 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is the
+DCN boundary — Edge-PRUNE's endpoint/server split mapped onto TPU: batch
+data-parallelism crosses pods, FSDP("data") + TP("model") stay inside the
+ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) == ndev:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, found "
+            f"{len(devices)}; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 (see dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])
+
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~per-chip sustained)
+DCN_BW = 25e9                   # bytes/s per pod-boundary (aggregate/chip grp)
+CHIP_HBM_BYTES = 16 * 2**30

@@ -1,0 +1,74 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the real training loop on whatever devices exist (a debug mesh on
+this CPU; the production mesh under the dry-run device flag). The same
+train_step the multi-pod dry-run lowers is executed here — the launcher
+and the dry-run share every code path except device count.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.models import transformer as T
+from repro.runtime import checkpoint, data, optim
+from repro.runtime.trainstep import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    print(f"# arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.init(params)
+    oc = optim.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    step = jax.jit(make_train_step(cfg, oc, microbatches=args.microbatches),
+                   donate_argnums=(0, 1))
+    gen = data.lm_batches(args.batch, args.seq, cfg.vocab_size)
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), gen):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.arch_type == "vlm":
+            jb["embeds"] = jnp.zeros((args.batch, cfg.frontend_tokens,
+                                      cfg.frontend_dim))
+            jb["labels"] = jnp.concatenate(
+                [jnp.full((args.batch, cfg.frontend_tokens), -1,
+                          jnp.int32), jb["labels"]], axis=1)
+        elif cfg.arch_type == "audio":
+            jb["embeds"] = jnp.zeros((args.batch, args.seq, cfg.frontend_dim))
+        params, opt, m = step(params, opt, jb)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params,
+                        meta={"arch": cfg.name, "steps": args.steps})
+        print(f"# checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model definitions: the paper's CNN applications and the assigned
+architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM / audio)."""

@@ -1,0 +1,261 @@
+"""Mixture-of-Experts MLP: token-choice top-k routing with fixed capacity.
+
+Covers qwen2-moe (4 shared + 60 routed, top-4) and qwen3-moe (128 routed,
+top-8). The production formulation is Switch-Transformer-style *dense
+dispatch*: a one-hot dispatch tensor (T, E, C) routes each token to its
+top-k experts' capacity slots; expert FFNs run as one batched einsum over
+the expert dimension, which shards cleanly over the mesh "model" axis
+(expert parallelism) — the dispatch/combine einsums lower to all-to-all-
+like collectives under SPMD. Tokens beyond an expert's capacity are
+dropped (their residual passes through), the standard trade-off.
+
+``load_balance_loss`` is the usual Switch aux loss: E * sum(frac_tokens *
+frac_router_prob); a router z-loss keeps logits bounded.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_init, mlp_apply, mlp_init, rms_norm
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln": jnp.zeros((d,), dtype),
+        "router": dense_init(ks[0], d, (m.n_experts,), jnp.float32),
+        # stacked expert FFNs: (E, d, f) / (E, f, d)
+        "w_gate": dense_init(ks[1], d, (m.n_experts, m.d_ff_expert),
+                             dtype).transpose(1, 0, 2),
+        "w_up": dense_init(ks[2], d, (m.n_experts, m.d_ff_expert),
+                           dtype).transpose(1, 0, 2),
+        "w_down": dense_init(ks[3], m.d_ff_expert, (m.n_experts, d),
+                             dtype).transpose(1, 0, 2),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.d_ff_expert * m.n_shared_experts,
+                               dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    # multiple of 32 so the capacity axis stays mesh-shardable (the
+    # fallback expert-tensor layout for non-dividing expert counts)
+    return max(c - c % -32, 32)
+
+
+def route(router_logits: jax.Array, cfg, capacity: int, *,
+          compute_dtype=jnp.float32
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """router_logits: (G, T, E). Returns (dispatch (G,T,E,C) bool,
+    combine (G,T,E,C) compute_dtype, aux_loss scalar).
+
+    The (G,T,E,C) tensors are the memory/collective hot spot of the MoE
+    layer (94 x 32 GB of fp32 all-gathers in the qwen3 train_4k baseline
+    — see EXPERIMENTS.md §Perf). Two structural choices keep them cheap:
+    * everything per-expert (one-hot, position-in-queue, capacity mask)
+      is ELEMENTWISE in E, so an E-sharded ("model"-axis) constraint
+      applied by the caller propagates through the whole routing calc —
+      only the (G,T,K) top-k selection sees the full expert dim;
+    * ``combine`` is produced in the caller's compute dtype (bf16), and
+      the capacity-slot one-hot is wrapped in stop_gradient (it is
+      piecewise constant), so AD never rebuilds fp32 (G,T,E,C) tensors.
+    """
+    g, t, e = router_logits.shape
+    m = cfg.moe
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, m.top_k)           # (G, T, K)
+    # renormalize the selected probabilities (qwen-style norm_topk_prob)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # expert one-hot per k-slot: (G, T, K, E)
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)
+    # position of each (token, k) within its expert's queue, in token order
+    # priority: lower k first, then token order (standard Switch ordering
+    # flattens k-major so that 1st choices win capacity over 2nd choices).
+    pos = jnp.cumsum(onehot.transpose(0, 2, 1, 3).reshape(g, t * m.top_k, e),
+                     axis=1) - 1                              # (G, K*T, E)
+    pos = pos.reshape(g, m.top_k, t, e).transpose(0, 2, 1, 3)  # (G, T, K, E)
+    pos = (pos * onehot).sum(-1)                              # (G, T, K)
+    keep = pos < capacity
+    disp_k = (onehot * keep[..., None]).astype(jnp.bool_)     # (G, T, K, E)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                            dtype=compute_dtype)[..., :capacity]  # (G,T,K,C)
+    pos_oh = jax.lax.stop_gradient(pos_oh)
+    disp_f = jax.lax.stop_gradient(disp_k.astype(compute_dtype))
+    # (G, T, E, C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", disp_f, pos_oh) > 0
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", disp_f, pos_oh,
+                         top_p.astype(compute_dtype))
+
+    # Switch aux loss + router z-loss
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=1)  # (G,E)
+    frac_probs = probs.mean(axis=1)                                    # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    z = jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2)
+    return dispatch, combine, aux + 1e-3 * z
+
+
+def route_indices(router_logits: jax.Array, cfg, capacity: int):
+    """Index-form routing: returns (top_idx (G,T,K) expert ids,
+    pos (G,T,K) slot-in-expert, keep (G,T,K) bool, top_p (G,T,K) f32,
+    aux_loss). Shares the exact assignment semantics of ``route`` (k-major
+    first-choice-wins capacity) without materializing (G,T,E,C)."""
+    g, t, e = router_logits.shape
+    m = cfg.moe
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot.transpose(0, 2, 1, 3).reshape(g, t * m.top_k, e),
+                     axis=1) - 1
+    pos = pos.reshape(g, m.top_k, t, e).transpose(0, 2, 1, 3)
+    pos = (pos * onehot).sum(-1)
+    keep = pos < capacity
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=1)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * probs.mean(axis=1), axis=-1))
+    z = jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2)
+    return top_idx, pos, keep, top_p, aux + 1e-3 * z
+
+
+def moe_apply_gather(p, x, cfg, ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Gather/scatter dispatch: the beyond-einsum formulation.
+
+    The Switch-style dense dispatch spends two (T x E x C) x D einsums —
+    pure masked data movement executed as matmuls — and their (G,T,E,C)
+    operands dominated both collectives and temp memory in the qwen3
+    train_4k dry-run. Here dispatch is one take-along gather into the
+    (G, E, C, D) expert buffers (slot->token indices built by a tiny int32
+    scatter) and combine is a (G, T, K, D) gather + weighted sum. AD gives
+    the scatter-add transposes. No (G,T,E,C) tensor ever exists.
+    See EXPERIMENTS.md §Perf iteration 4.
+    """
+    b, s, d = x.shape
+    m = cfg.moe
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    logits = (h @ p["router"].astype(h.dtype)).astype(jnp.float32)
+    if ctx is not None:
+        logits = ctx.batch_only(logits)
+    cap = _capacity(s, cfg)
+    top_idx, pos, keep, top_p, aux = route_indices(logits, cfg, cap)
+
+    # slot -> token index table (G, E, C); sentinel = s (the zero pad row).
+    # dropped (token, k) pairs write to out-of-bounds slot c=cap and are
+    # discarded by mode="drop".
+    gi = jnp.arange(b)[:, None, None]
+    ti = jnp.broadcast_to(jnp.arange(s)[None, :, None], top_idx.shape)
+    idx_token = jnp.full((b, m.n_experts, cap), s, jnp.int32)
+    idx_token = idx_token.at[gi, top_idx,
+                             jnp.where(keep, pos, cap)].set(ti, mode="drop")
+    if ctx is not None:
+        idx_token = ctx.expert_tensor(idx_token, expert_axis=1)
+
+    h_pad = jnp.concatenate([h, jnp.zeros((b, 1, d), h.dtype)], axis=1)
+    xe = jax.vmap(lambda hh, ii: hh[ii])(h_pad, idx_token)  # (G, E, C, D)
+    if ctx is not None:
+        xe = ctx.expert_tensor(xe, expert_axis=1)
+    act = act_fn(cfg.act)
+    hidden = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])
+    if ctx is not None:
+        ye = ctx.expert_tensor(ye, expert_axis=1)
+
+    # combine: gather each token's K slots and weight (dropped -> w=0)
+    flat_slot = top_idx * cap + jnp.where(keep, pos, 0)       # (G, T, K)
+    ye_flat = ye.reshape(b, m.n_experts * cap, d)
+    yk = jax.vmap(lambda yy, ii: yy[ii])(ye_flat, flat_slot)  # (G, T, K, D)
+    w = (top_p * keep).astype(h.dtype)                        # (G, T, K)
+    y = jnp.einsum("gtk,gtkd->gtd", w, yk)
+    if m.n_shared_experts:
+        sh = p["shared"]
+        gx = act(h @ sh["w_gate"]) * (h @ sh["w_up"])
+        y = y + gx @ sh["w_down"]
+    return x + y.astype(x.dtype), aux
+
+
+def moe_apply(p, x, cfg, ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch on cfg.moe_impl: "gather" (default, index-form dispatch)
+    or "einsum" (Switch-style dense dispatch, kept as the reference
+    production path and for ablation)."""
+    if getattr(cfg, "moe_impl", "gather") == "gather":
+        return moe_apply_gather(p, x, cfg, ctx=ctx)
+    return moe_apply_einsum(p, x, cfg, ctx=ctx)
+
+
+def moe_apply_einsum(p, x, cfg, ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux_loss. Groups = batch rows, so the
+    capacity is per-row — this keeps the dispatch tensor's token dim
+    shardable along the batch/data axis. ``ctx`` (ShardCtx) pins the
+    (G,T,E,C) routing tensors and (G,E,C,D) expert buffers to
+    expert-on-"model" sharding — expert parallelism — so the dispatch/
+    combine einsums lower to all-to-all-sized transfers instead of
+    full-tensor all-gathers."""
+    b, s, d = x.shape
+    m = cfg.moe
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    # router matmul in compute dtype; only the small (G,T,E) logits go f32
+    logits = (h @ p["router"].astype(h.dtype)).astype(jnp.float32)
+    if ctx is not None:
+        # keep the (G,T,E) logits batch-sharded: otherwise the top_k /
+        # aux-loss reductions pull a full-batch gather into every layer
+        # (2 x 537 MB/layer observed; §Perf iteration 3)
+        logits = ctx.batch_only(logits)
+    cap = _capacity(s, cfg)
+    dispatch, combine, aux = route(logits, cfg, cap, compute_dtype=h.dtype)
+    if ctx is not None:
+        dispatch = ctx.expert_tensor(dispatch, expert_axis=2)
+        combine = ctx.expert_tensor(combine, expert_axis=2)
+    # dispatch tokens into (G, E, C, D) expert buffers
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(h.dtype), h)
+    if ctx is not None:
+        xe = ctx.expert_tensor(xe, expert_axis=1)
+    act = act_fn(cfg.act)
+    hidden = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])
+    if ctx is not None:
+        ye = ctx.expert_tensor(ye, expert_axis=1)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(h.dtype), ye)
+    if m.n_shared_experts:
+        # shared experts run densely for every token (qwen2-moe)
+        sh = p["shared"]
+        g = act(h @ sh["w_gate"]) * (h @ sh["w_up"])
+        y = y + g @ sh["w_down"]
+    return x + y.astype(x.dtype), aux
+
+
+def moe_apply_dense_oracle(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Reference: compute EVERY expert for every token, weight by the
+    (renormalized) top-k router probs. No capacity, no dropping — the
+    oracle that ``moe_apply`` approaches as capacity_factor -> inf.
+    O(E/k) overcompute; tests only."""
+    m = cfg.moe
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    logits = jnp.einsum("gtd,de->gte", h.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    weights = jnp.zeros_like(probs)
+    weights = jax.vmap(jax.vmap(lambda w, i, v: w.at[i].set(v)))(
+        weights, top_idx, top_p)                              # (G, T, E)
+    act = act_fn(cfg.act)
+    hidden = act(jnp.einsum("gtd,edf->gtef", h, p["w_gate"])) \
+        * jnp.einsum("gtd,edf->gtef", h, p["w_up"])
+    ye = jnp.einsum("gtef,efd->gted", hidden, p["w_down"])
+    y = jnp.einsum("gte,gted->gtd", weights.astype(h.dtype), ye)
+    if m.n_shared_experts:
+        sh = p["shared"]
+        g = act(h @ sh["w_gate"]) * (h @ sh["w_up"])
+        y = y + g @ sh["w_down"]
+    onehot = jax.nn.one_hot(top_idx, m.n_experts).sum(2)
+    frac_tokens = onehot.mean(1)
+    aux = m.n_experts * jnp.mean(jnp.sum(frac_tokens * probs.mean(1), -1))
+    return x + y.astype(x.dtype), aux

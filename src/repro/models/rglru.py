@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+
+    x -> RMSNorm -> { gate branch: W_gate -> GeLU            } -> * -> W_out -> +x
+                    { rec branch:  W_rec -> causal conv(4)
+                                   -> RG-LRU                 }
+
+RG-LRU recurrence (real-gated linear recurrent unit), per channel::
+
+    r_t = sigmoid(W_a h_t + b_a)          input-dependent recurrence gate
+    i_t = sigmoid(W_x h_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)        with c = 8
+    y_t = a_t * y_{t-1} + sqrt(1 - a_t^2) * (i_t * h_t)
+
+Train/prefill lowers the recurrence with ``jax.lax.associative_scan``
+(log-depth, parallelizable across the sequence — the TPU-native analogue
+of the paper's GPU linear-scan kernel); the Pallas kernel
+(``kernels.rglru_scan``) is the blocked TPU version. Decode is the O(1)
+state update. The temporal conv keeps a (B, width-1, D) tail state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+    lam = jax.random.uniform(ks[4], (d,), jnp.float32, 0.001, 0.1)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / _C) - 1.0)  # inverse softplus
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_in": dense_init(ks[0], d, (2 * d,), dtype),      # [gate | rec]
+        "conv_w": dense_init(ks[1], w, (d,), dtype),        # depthwise
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_gates": dense_init(ks[2], d, (2 * d,), dtype),   # [r | i]
+        "b_gates": jnp.zeros((2 * d,), dtype),
+        "lam": lam,
+        "w_out": dense_init(ks[3], d, (d,), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, D); w: (W, D). ``tail``: (B, W-1, D)
+    previous inputs for streaming decode (zeros for prefill)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b
+
+
+def _gates(p, xc):
+    gates = xc @ p["w_gates"] + p["b_gates"]
+    r, i = jnp.split(jax.nn.sigmoid(gates.astype(jnp.float32)), 2, axis=-1)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xc.astype(jnp.float32))
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """y_t = a_t y_{t-1} + b_t via associative scan. a,b: (B, S, D)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+    a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b0 = jnp.concatenate([h0[:, None], b], axis=1)
+    _, y = jax.lax.associative_scan(combine, (a0, b0), axis=1)
+    return y[:, 1:]
+
+
+def rglru_apply(p, x, cfg) -> jax.Array:
+    """Full-sequence recurrent block with residual. x: (B, S, D)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate, rec = jnp.split(h @ p["w_in"], 2, axis=-1)
+    gate = jax.nn.gelu(gate)
+    xc = _causal_conv(rec, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xc)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.rglru_scan import ops as scan_ops
+        y = scan_ops.rglru_scan(a, b, jnp.zeros_like(a[:, 0]))
+    else:
+        y = rglru_scan_ref(a, b, jnp.zeros_like(a[:, 0]))
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return x + out
+
+
+def rglru_prefill_cache(p, x, cfg, *, positions=None) -> Tuple[jax.Array, dict]:
+    """Prefill returning the decode state: recurrent h plus conv tail."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate, rec = jnp.split(h @ p["w_in"], 2, axis=-1)
+    gate = jax.nn.gelu(gate)
+    xc = _causal_conv(rec, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xc)
+    y = rglru_scan_ref(a, b, jnp.zeros_like(a[:, 0]))
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    w = cfg.rglru_conv_width
+    cache = {"h": y[:, -1], "conv": rec[:, -(w - 1):].astype(x.dtype)}
+    return x + out, cache
+
+
+def rglru_decode(p, x, cfg, *, cache, cache_len=None) -> Tuple[jax.Array, dict]:
+    """One-token decode: O(1) state update. x: (B, 1, D)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate, rec = jnp.split(h @ p["w_in"], 2, axis=-1)
+    gate = jax.nn.gelu(gate)
+    xc = _causal_conv(rec, p["conv_w"], p["conv_b"], tail=cache["conv"])
+    a, b = _gates(p, xc)
+    y = a[:, 0] * cache["h"] + b[:, 0]
+    out = (y[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    new_cache = {"h": y,
+                 "conv": jnp.concatenate([cache["conv"], rec], axis=1)[:, 1:]}
+    return x + out, new_cache

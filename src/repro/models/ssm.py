@@ -1,0 +1,292 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence with exponential gating).
+
+mLSTM recurrence (per head, state C in R^{dh x dh}, n in R^{dh}, m in R)::
+
+    m_t = max(log f_t + m_{t-1}, log i_t)                 (stabilizer)
+    C_t = exp(log f_t + m_{t-1} - m_t) C_{t-1} + exp(log i_t - m_t) v_t k_t^T
+    n_t = exp(log f_t + m_{t-1} - m_t) n_{t-1} + exp(log i_t - m_t) k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Training/prefill uses the CHUNKWISE parallel form (the TPU-native
+adaptation of the paper's CUDA kernels): the sequence is split into
+chunks of length ``chunk``; within a chunk the contribution is a masked
+quadratic "decay attention", across chunks the (C, n, m) state is carried
+by ``lax.scan`` — O(S * chunk) work/memory instead of O(S^2), which is
+what makes prefill_32k and long_500k tractable for this family.
+
+sLSTM is inherently sequential (h_{t-1} feeds the gates through recurrent
+block-diagonal R matrices) and lowers as a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    dm = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    assert dm % nh == 0
+    dh = dm // nh
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": dense_init(ks[0], d, (2 * dm,), dtype),     # [x | z-gate]
+        "conv_w": dense_init(ks[1], 4, (dm,), dtype),
+        "conv_b": jnp.zeros((dm,), dtype),
+        "wq": dense_init(ks[2], dm, (nh, dh), dtype),
+        "wk": dense_init(ks[3], dm, (nh, dh), dtype),
+        "wv": dense_init(ks[4], dm, (nh, dh), dtype),
+        "w_if": dense_init(ks[5], dm, (2 * nh,), jnp.float32),
+        # forget-gate bias init positive -> long memory at init
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]),
+        "gn": jnp.zeros((nh, dh), dtype),                   # per-head norm
+        "w_down": dense_init(ks[6], dm, (d,), dtype),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    from repro.models.rglru import _causal_conv
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"])
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)             # (B, S, nh)
+    log_f = -jax.nn.softplus(-f_raw)                        # log sigmoid
+    return q, k, v, z, log_i, log_f
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, *, chunk: int = 256):
+    """q,k,v: (B,S,H,dh) f32; log_i/log_f: (B,S,H); state (C,n,m) or None.
+    Returns (out (B,S,H,dh), new_state). Chunkwise-parallel stabilized."""
+    b, s, nh, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    L = min(chunk, s)
+    pad = -s % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // L
+
+    def to_chunks(x):
+        return x.reshape(b, nc, L, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh))
+        n0 = jnp.zeros((b, nh, dh))
+        m0 = jnp.full((b, nh), -1e30)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qh, kh, vh, li, lf = inp                   # (B,L,H,dh), ..., (B,L,H)
+        F = jnp.cumsum(lf, axis=1)                 # inclusive decay-to-i
+        # per-position stabilizer within + across chunk
+        intra_max = jnp.max(li - F, axis=1, keepdims=True)  # loose upper bnd
+        m_pos = jnp.maximum(m[:, None] + F, F + intra_max)  # (B,L,H)
+        # intra-chunk masked decay attention
+        # D[i,j] = exp(li_j + F_i - F_j - m_i)  for j <= i
+        dmat = (li[:, None, :, :] + F[:, :, None, :]
+                - F[:, None, :, :] - m_pos[:, :, None, :])  # (B, i, j, H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -1e30)
+        w = jnp.exp(dmat)
+        scores = jnp.einsum("bihd,bjhd->bijh", qh, kh) * w
+        num = jnp.einsum("bijh,bjhd->bihd", scores, vh)
+        den = scores.sum(axis=2)                              # (B,L,H)
+        # inter-chunk: decayed previous state
+        inter_w = jnp.exp(m[:, None] + F - m_pos)             # (B,L,H)
+        num = num + jnp.einsum("bihd,bhde,bih->bihe", qh, C, inter_w)
+        den = den + jnp.einsum("bihd,bhd,bih->bih", qh, n, inter_w)
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_pos))[..., None]
+        # state update to end of chunk
+        Ftot = F[:, -1]                                       # (B,H)
+        m_new = jnp.maximum(m + Ftot, jnp.max(li + Ftot[:, None] - F, axis=1))
+        kw = jnp.exp(li + Ftot[:, None] - F - m_new[:, None])  # (B,L,H)
+        decay = jnp.exp(m + Ftot - m_new)                      # (B,H)
+        C_new = decay[..., None, None] * C + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", kh, vh, kw)
+        n_new = decay[..., None] * n + jnp.einsum("bjhd,bjh->bhd", kh, kw)
+        return (C_new, n_new, m_new), out
+
+    (C, n, m), outs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                   (qc, kc, vc, lic, lfc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * L, nh, dh)[:, :s]
+    return out, (C, n, m)
+
+
+def mlstm_apply(p, x, cfg) -> jax.Array:
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(p, x, cfg)
+    out, _ = mlstm_chunkwise(q, k, v, log_i, log_f, None,
+                             chunk=min(cfg.attn_chunk, 256))
+    out = rms_norm(out.astype(x.dtype), p["gn"], cfg.norm_eps)
+    dm = out.shape[-2] * out.shape[-1]
+    out = out.reshape(*x.shape[:2], dm) * jax.nn.silu(z)
+    return x + out @ p["w_down"]
+
+
+def mlstm_prefill_cache(p, x, cfg) -> Tuple[jax.Array, dict]:
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(p, x, cfg)
+    out, (C, n, m) = mlstm_chunkwise(q, k, v, log_i, log_f, None,
+                                     chunk=min(cfg.attn_chunk, 256))
+    out = rms_norm(out.astype(x.dtype), p["gn"], cfg.norm_eps)
+    dm = out.shape[-2] * out.shape[-1]
+    out = out.reshape(*x.shape[:2], dm) * jax.nn.silu(z)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xm = (h @ p["w_up"])[..., :dm]
+    cache = {"C": C, "n": n, "m": m, "conv": xm[:, -3:].astype(x.dtype)}
+    return x + out @ p["w_down"], cache
+
+
+def mlstm_decode(p, x, cfg, *, cache, cache_len=None) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D); O(1) matrix-memory update."""
+    from repro.models.rglru import _causal_conv
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    dm = up.shape[-1] // 2
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"],
+                                  tail=cache["conv"]))
+    nh = p["wq"].shape[1]
+    dh = p["wq"].shape[2]
+    q = jnp.einsum("bd,dhk->bhk", xc[:, 0], p["wq"]).astype(jnp.float32) \
+        / math.sqrt(dh)
+    k = jnp.einsum("bd,dhk->bhk", xc[:, 0], p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", xm[:, 0], p["wv"]).astype(jnp.float32)
+    gates = xc[:, 0].astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    decay = jnp.exp(log_f + m - m_new)
+    inw = jnp.exp(log_i - m_new)
+    C = decay[..., None, None] * C + inw[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = decay[..., None] * n + inw[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype)
+    out = rms_norm(out, p["gn"], cfg.norm_eps).reshape(x.shape[0], 1, dm)
+    out = out * jax.nn.silu(z)
+    new_cache = {"C": C, "n": n, "m": m_new,
+                 "conv": jnp.concatenate([cache["conv"], xm], 1)[:, 1:]}
+    return x + out @ p["w_down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    assert d % nh == 0
+    dh = d // nh
+    ds = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w": dense_init(ks[0], d, (4, nh, dh), dtype),       # z,i,f,o
+        "r": (jax.random.normal(ks[1], (4, nh, dh, dh), jnp.float32)
+              / math.sqrt(dh)).astype(dtype),
+        "b": jnp.zeros((4, nh, dh), jnp.float32)
+             .at[2].set(3.0),                                # forget bias
+        "gn": jnp.zeros((nh, dh), dtype),
+        "w_up": dense_init(ks[2], d, (2 * ds,), dtype),
+        "w_down": dense_init(ks[3], ds, (d,), dtype),
+    }
+
+
+def _slstm_cell(p, wx_t, state):
+    """One sLSTM step. wx_t: (B, 4, nh, dh) input contribution;
+    state = (c, n, m, h) each (B, nh, dh)."""
+    c, n, m, h = state
+    rec = jnp.einsum("bhd,ghde->bghe", h.astype(jnp.float32),
+                     p["r"].astype(jnp.float32))
+    raw = wx_t.astype(jnp.float32) + rec + p["b"]
+    z = jnp.tanh(raw[:, 0])
+    log_i = raw[:, 1]
+    log_f = -jax.nn.softplus(-raw[:, 2])
+    o = jax.nn.sigmoid(raw[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_scan(p, wx, state):
+    """wx: (B, S, 4, nh, dh). Sequential lax.scan over time."""
+    def step(st, wx_t):
+        st = _slstm_cell(p, wx_t, st)
+        return st, st[3]
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), state  # (B,S,nh,dh)
+
+
+def _slstm_zero_state(b, nh, dh):
+    z = jnp.zeros((b, nh, dh))
+    return (z, jnp.ones((b, nh, dh)), jnp.full((b, nh, dh), -1e30), z)
+
+
+def _slstm_out(p, hs, x, cfg):
+    hs = rms_norm(hs.astype(x.dtype), p["gn"], cfg.norm_eps)
+    flat = hs.reshape(*hs.shape[:-2], -1)
+    up = flat @ p["w_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    return x + (jax.nn.gelu(a) * g) @ p["w_down"]
+
+
+def slstm_apply(p, x, cfg) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dghe->bsghe", h, p["w"])
+    nh, dh = p["gn"].shape
+    hs, _ = slstm_scan(p, wx, _slstm_zero_state(x.shape[0], nh, dh))
+    return _slstm_out(p, hs, x, cfg)
+
+
+def slstm_prefill_cache(p, x, cfg) -> Tuple[jax.Array, dict]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dghe->bsghe", h, p["w"])
+    nh, dh = p["gn"].shape
+    hs, st = slstm_scan(p, wx, _slstm_zero_state(x.shape[0], nh, dh))
+    cache = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+    return _slstm_out(p, hs, x, cfg), cache
+
+
+def slstm_decode(p, x, cfg, *, cache, cache_len=None) -> Tuple[jax.Array, dict]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dghe->bsghe", h, p["w"])[:, 0]
+    st = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, hn = _slstm_cell(p, wx, st)
+    out = _slstm_out(p, hn[:, None], x, cfg)
+    return out, {"c": c, "n": n, "m": m, "h": hn}

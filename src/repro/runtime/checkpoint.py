@@ -1,0 +1,46 @@
+"""Pytree checkpointing to a single .npz (path-flattened), plus a sidecar
+JSON with the step counter and config name. Restore rebuilds the exact
+pytree structure from a template (e.g. ``jax.eval_shape(init_params)``)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    with open(path + ".meta.json", "w") as fh:
+        json.dump(meta or {}, fh)
+
+
+def restore(path: str, template: Any) -> Any:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    out = []
+    for p, leaf in leaves_paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_meta(path: str) -> Dict:
+    with open(path + ".meta.json") as fh:
+        return json.load(fh)

@@ -1,0 +1,132 @@
+"""Batched serving engine: prefill + decode loop over a request batch.
+
+The engine compiles two functions per (batch, prompt_len) bucket —
+``prefill`` and ``decode_step`` — and greedily decodes until every
+request hits its max_new_tokens or emits ``eos``. Requests are grouped
+into same-length buckets (left-truncation to the bucket length); this is
+the standard static-bucket serving pattern and is exactly what the
+decode_32k / long_500k dry-run shapes lower.
+
+The engine also demonstrates the Edge-PRUNE integration: a ``ServeEngine``
+can be constructed over a *partitioned* model (an actor graph + mapping),
+in which case prefill executes stage-by-stage through the synthesized
+StagedProgram — the collaborative-inference path of the paper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    embeds: Optional[np.ndarray] = None     # VLM/audio frontend output
+
+
+@dataclass
+class Completion:
+    id: int
+    tokens: List[int]
+    prefill_s: float
+    decode_s: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 max_len: int = 512, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.greedy = greedy
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache, clen))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        out: List[Completion] = []
+        # bucket by prompt length
+        buckets: Dict[int, List[Request]] = {}
+        for r in requests:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        for plen, reqs in sorted(buckets.items()):
+            out.extend(self._run_bucket(plen, reqs))
+        return sorted(out, key=lambda c: c.id)
+
+    def _run_bucket(self, plen: int, reqs: List[Request]) -> List[Completion]:
+        b = len(reqs)
+        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]))}
+        if reqs[0].embeds is not None:
+            batch["embeds"] = jnp.asarray(np.stack([r.embeds for r in reqs]))
+        t0 = time.perf_counter()
+        logits, cache, clen = jax.block_until_ready(
+            self._prefill(self.params, batch))
+        t1 = time.perf_counter()
+        max_new = max(r.max_new_tokens for r in reqs)
+        toks = self._sample(logits)
+        emitted = [[int(t)] for t in np.asarray(toks)]
+        done = np.zeros(b, bool)
+        for _ in range(max_new - 1):
+            logits, cache, clen = self._decode(self.params, toks, cache, clen)
+            toks = self._sample(logits)
+            for i, t in enumerate(np.asarray(toks)):
+                if not done[i]:
+                    if reqs[i].eos is not None and t == reqs[i].eos:
+                        done[i] = True
+                    elif len(emitted[i]) < reqs[i].max_new_tokens:
+                        emitted[i].append(int(t))
+                    else:
+                        done[i] = True
+            if done.all():
+                break
+        jax.block_until_ready(toks)
+        t2 = time.perf_counter()
+        return [Completion(r.id, emitted[i], t1 - t0, t2 - t1)
+                for i, r in enumerate(reqs)]
+
+
+# ---------------------------------------------------------------------------
+# Edge-PRUNE collaborative-inference serving (the paper's technique)
+# ---------------------------------------------------------------------------
+
+class PartitionedServeEngine:
+    """Serves prefill through a VR-PRUNE StagedProgram: the model's actor
+    graph split by a mapping (endpoint/server or pod0/pod1), TX/RX channels
+    auto-inserted at the boundary — Edge-PRUNE Sec III.B applied to LLMs."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, mapping, *,
+                 batch: int = 1, seq: int = 8, group_size: int = 1):
+        from repro.core.synthesis import synthesize
+        self.cfg = cfg
+        self.graph = T.to_actor_graph(cfg, params, batch=batch, seq=seq,
+                                      group_size=group_size)
+        self.program = synthesize(self.graph, mapping)
+
+    def infer(self, tokens: np.ndarray) -> jax.Array:
+        sinks = self.program.run_local({"Input": jnp.asarray(tokens)})
+        return sinks["Head"]
+
+    def comm_bytes(self) -> int:
+        return self.program.comm_bytes_per_iteration()

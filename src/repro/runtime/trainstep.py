@@ -1,0 +1,96 @@
+"""The jitted step functions the launcher and dry-run lower.
+
+All three apply the ZeRO-3 compute-copy discipline when a mesh is given:
+master fp32 params stay FSDP("data") x TP("model") sharded; the step
+casts them to bf16 and constrains the compute copy to model-only
+sharding, which lowers to weight all-gather over "data" (forward) and
+gradient reduce-scatter (backward) — see sharding.rules.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import optim
+from repro.sharding.rules import ShardCtx
+
+
+def _prepare(params, cfg: ModelConfig, mesh):
+    """Cast to bf16 (whole tree — stays master-sharded, cheap) and gather
+    the NON-scan leaves (embed / head / encoder / projector) to their
+    compute sharding. Scan-stacked layers are gathered per scan step
+    inside the model via ctx.layer — gathering the full stack here would
+    materialize every layer's compute copy at once."""
+    ctx = ShardCtx(mesh) if mesh is not None else None
+    params = T.cast_params_for_compute(params, cfg)
+    if ctx is not None:
+        params = {k: (v if k == "scan" else ctx.layer(v))
+                  for k, v in params.items()}
+    return params, ctx
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                    mesh=None, *, microbatches: int = 1):
+    """train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch
+    is split on its leading dim and scanned, dividing activation/logits
+    temp memory by the microbatch count at the cost of re-running the
+    (already rematerialized) forward per slice. This is how the train_4k
+    dry-runs of the vocab-heavy configs fit the 16 GB/chip budget.
+    """
+
+    def loss(params, batch):
+        params, ctx = _prepare(params, cfg, mesh)
+        return T.loss_fn(params, cfg, batch, ctx=ctx)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch
+                   ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+        if microbatches == 1:
+            (l, metrics), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def acc_step(acc, one):
+                (l, metrics), g = grads_of(params, one)
+                acc_g, acc_l, acc_m = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l,
+                        jax.tree.map(jnp.add, acc_m, metrics)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"ce": jnp.zeros(()), "aux": jnp.zeros(())}
+            (grads, l, metrics), _ = jax.lax.scan(
+                acc_step, (zero_g, jnp.zeros(()), zero_m), mb)
+            scale = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            l = l * scale
+            metrics = jax.tree.map(lambda m: m * scale, metrics)
+        params, opt_state, om = optim.apply(opt_cfg, params, opt_state, grads)
+        return params, opt_state, {"loss": l, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int, mesh=None):
+    def prefill_step(params, batch):
+        params, ctx = _prepare(params, cfg, mesh)
+        return T.prefill(params, cfg, batch, max_len=max_len, ctx=ctx)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    def serve_step(params, cache, token, cache_len):
+        params, ctx = _prepare(params, cfg, mesh)
+        return T.decode_step(params, cfg, token, cache, cache_len, ctx=ctx)
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (batch_shardings, cache_shardings,
+                                  compute_params_shardings, params_shardings,
+                                  replicated, spec_for)

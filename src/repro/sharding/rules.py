@@ -1,0 +1,339 @@
+"""Role-based PartitionSpec derivation with divisibility fallback.
+
+Every parameter / cache / batch leaf gets a *candidate list* of specs
+derived from its pytree path (its role) and rank; the first candidate
+whose named axes all divide the corresponding dims (and use each mesh
+axis at most once) wins, otherwise the leaf falls back down the list and
+ultimately to replication. This is what makes ONE rule set serve all 10
+architectures on both the (data=16, model=16) pod mesh and the
+(pod=2, data=16, model=16) multi-pod mesh:
+
+* qwen3-moe: 128 experts % 16 == 0 -> expert-parallel over "model".
+* qwen2-moe: 60 experts % 16 != 0 -> the same rule falls through to
+  per-expert tensor parallelism (d_ff_expert over "model").
+* MQA (kv=1): wk/wv head dim unshardable -> falls back to d_model/"data".
+* long_500k (batch=1): KV cache batch unshardable -> falls back to
+  sequence sharding over ("data","model") — XLA then lowers the decode
+  attention softmax as a sharded reduction (flash-decode analogue).
+
+Weights use 2D sharding (FSDP over "data" x TP over "model"); the batch
+shards over ("pod","data") — data parallel across pods over DCN, FSDP +
+TP inside the pod over ICI. This mirrors Edge-PRUNE's principle that
+distribution is a *mapping decision* external to the model definition.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Optional[object]   # axis name, tuple of names, or None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(spec: Sequence[Axis], shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    if len(spec) != len(shape):
+        return False
+    used: List[str] = []
+    for axis, dim in zip(spec, shape):
+        if axis is None:
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        for n in names:
+            if n not in mesh.shape or n in used:
+                return False
+            used.append(n)
+        if dim % _axis_size(mesh, axis):
+            return False
+    return True
+
+
+def _resolve(cands: List[Tuple[Axis, ...]], shape: Tuple[int, ...],
+             mesh: Mesh) -> P:
+    for c in cands:
+        if _fits(c, shape, mesh):
+            return P(*c)
+    return P()   # replicate
+
+
+def batch_axes(mesh: Mesh):
+    """The meta-axis the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (matched against the flattened pytree path string)
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: List[Tuple[str, List[Tuple[Axis, ...]]]] = [
+    # --- MoE expert banks (E, D, F) / (E, F, D): expert-parallel first,
+    # then per-expert TP on the ff dim, then FSDP-only.
+    (r"moe.*w_(gate|up)$", [("model", "data", None), (None, "data", "model"),
+                            (None, None, "model"), (None, "data", None)]),
+    (r"moe.*w_down$", [("model", None, "data"), (None, "model", "data"),
+                       (None, "model", None), (None, None, "data")]),
+    (r"moe.*router$", [("data", None), (None, None)]),
+    # shared experts are ordinary MLPs (matched by the generic mlp rules)
+    # --- attention projections
+    (r"w[qkv]$", [("data", "model", None), (None, "model", None),
+                  ("data", None, None)]),
+    (r"wo$", [("model", None, "data"), ("model", None, None),
+              (None, None, "data")]),
+    (r"b[qkv]$", [("model", None), (None, None)]),
+    # --- gated MLP
+    (r"w_(gate|up)$", [("data", "model"), (None, "model"), ("data", None)]),
+    (r"w_down$", [("model", "data"), ("model", None), (None, "data")]),
+    # --- rglru / mlstm / slstm
+    (r"w_in$", [("data", "model"), (None, "model"), ("data", None)]),
+    (r"w_gates$", [("data", "model"), (None, "model"), ("data", None)]),
+    (r"w_out$", [("model", "data"), ("model", None), (None, "data")]),
+    (r"conv_w$", [(None, "model"), (None, None)]),
+    (r"lam$", [("model",), (None,)]),
+    (r"w_up$", [("data", "model"), (None, "model"), ("data", None)]),
+    (r"\br$", [(None, "model", None, None), (None, None, None, None)]),
+    (r"\bw$", [("data", None, "model", None), ("data", None, None, None)]),
+    (r"w_if$", [("data", None), (None, None)]),
+    # --- embeddings / head / projector
+    (r"embed$", [("model", "data"), ("model", None), (None, "data")]),
+    (r"lm_head$", [("data", "model"), (None, "model"), ("data", None)]),
+    (r"frontend_proj.*w1$", [("data", "model"), (None, "model")]),
+    (r"frontend_proj.*w2$", [("model", "data"), (None, "data")]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+             *, stacked: bool = False) -> P:
+    """Spec for one param leaf. ``stacked``: leading scan-period dim."""
+    core_shape = shape[1:] if stacked else shape
+    cands: List[Tuple[Axis, ...]] = []
+    for pat, cs in _PARAM_RULES:
+        if re.search(pat, path_str):
+            cands.extend(cs)           # later-matching rules are fallbacks
+    if not cands and core_shape:
+        # generic fallback: FSDP the largest dim over "data" if divisible
+        big = max(range(len(core_shape)), key=lambda i: core_shape[i])
+        c: List[Axis] = [None] * len(core_shape)
+        c[big] = "data"
+        cands.append(tuple(c))
+    spec = _resolve(cands, core_shape, mesh)
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    return spec
+
+
+def params_shardings(params_tree: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree for a params (or optimizer-state) pytree.
+    ``params_tree`` may hold arrays or ShapeDtypeStructs."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "scan" in ps.split("/")
+        return NamedSharding(mesh, spec_for(ps, leaf.shape, mesh,
+                                            stacked=stacked))
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree: Any, mesh: Mesh) -> Any:
+    """Inputs: shard dim 0 (global batch) over ("pod","data") with
+    divisibility fallback (long_500k batch=1 -> replicated)."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        cands = [(ba,) + (None,) * (len(leaf.shape) - 1)]
+        if len(ba) > 1:
+            cands.append((ba[-1],) + (None,) * (len(leaf.shape) - 1))
+        return NamedSharding(mesh, _resolve(cands, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh) -> Any:
+    """Decode caches. KV tensors (B, S, Hk, hd): batch x kv-head sharding
+    when divisible, else sequence sharding (the long-context path).
+    Recurrent states (B, ...): batch sharding, falling back to feature
+    sharding for batch=1."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "scan" in ps.split("/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        last = ps.split("/")[-1]
+        if last in ("k", "v", "cross_k", "cross_v"):
+            # batch x kv-heads when heads divide; otherwise batch x
+            # SEQUENCE over "model" — the flash-decode layout: each model
+            # shard scans its slice of the cache and the softmax combines
+            # with a tiny stats psum. Keeping the model axis idle instead
+            # (ba, None, None, None) left 2 x 7.5 GB fp32 cache reshards
+            # per decoded token in the chatglm3 decode_32k baseline
+            # (§Perf iteration 3.1).
+            cands = [
+                (ba, None, "model", None),
+                (ba, "model", None, None),
+                (ba, None, None, None),
+                (None, ("data", "model"), None, None),
+                (None, "data", None, None),
+                (None, "model", None, None),
+            ]
+        elif last == "C":      # mlstm matrix memory (B, nh, dh, dh)
+            cands = [(ba, "model", None, None), (ba, None, None, None),
+                     (None, "model", None, None)]
+        elif last == "conv":   # (B, W-1, D)
+            cands = [(ba, None, "model"), (ba, None, None),
+                     (None, None, "model")]
+        elif len(shape) >= 2:  # other recurrent states (B, ...)
+            cands = [(ba,) + (None,) * (len(shape) - 1),
+                     (None, "model") + (None,) * (len(shape) - 2)]
+        else:
+            cands = [(ba,)]
+        spec = _resolve(cands, shape, mesh)
+        if stacked:
+            spec = P(*((None,) + tuple(spec)))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+class ShardCtx:
+    """Sharding context threaded through the model functions.
+
+    * ``layer(p)`` — constrain ONE layer's (already bf16-cast) params to
+      the model-only compute sharding. Called INSIDE the period-scan body,
+      so the weight all-gather over "data" happens per scan step on the
+      current slice (ZeRO-3); constraining the full stacked tree up front
+      would materialize a gathered copy of every layer at once (observed
+      as an 18.9 GB hoisted all-gather on qwen3's expert banks).
+    * ``act(x)`` — constrain (B, S, D) activations to
+      (batch-axes, None, "model"): keeps the scan-carry residual stack
+      that AD saves for the backward pass sharded over BOTH batch and
+      model axes (observed otherwise as a 50-100 GB residual buffer).
+    """
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def layer(self, layer_params: Any) -> Any:
+        def one(path, leaf):
+            ps = _path_str(path)
+            spec = spec_for(ps, leaf.shape, self.mesh)
+            kept = tuple(a if a == "model" else None for a in spec)
+            return NamedSharding(self.mesh, P(*kept))
+        sh = jax.tree_util.tree_map_with_path(one, layer_params)
+        return jax.lax.with_sharding_constraint(layer_params, sh)
+
+    def act(self, x) -> Any:
+        ba = batch_axes(self.mesh)
+        cands = [(ba,) + (None,) * (x.ndim - 2) + ("model",),
+                 (ba,) + (None,) * (x.ndim - 1),
+                 (None,) * (x.ndim - 1) + ("model",)]
+        spec = _resolve(cands, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def expert_tensor(self, x, *, expert_axis: int) -> Any:
+        """MoE routing/buffer tensors: batch on dim 0, experts on "model".
+        When the expert count doesn't divide (qwen2-moe: 60 experts on a
+        16-wide axis), fall back to sharding the CAPACITY axis — it is
+        batch-like (independent slots), always a multiple of 32 (see
+        moe._capacity), and keeps the (G,T,E,C) tensors 16x smaller
+        (qwen2-moe prefill_32k: 132 GB -> fits). Last resort: batch-only.
+        """
+        ba = batch_axes(self.mesh)
+        ex = [None] * x.ndim
+        ex[0] = ba
+        ex[expert_axis] = "model"
+        cx = [None] * x.ndim
+        cx[0] = ba
+        if expert_axis + 1 < x.ndim:
+            cx[expert_axis + 1] = "model"
+        cands = [tuple(ex), tuple(cx), (ba,) + (None,) * (x.ndim - 1)]
+        spec = _resolve(cands, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch_only(self, x) -> Any:
+        """(B, ...) constrained to batch-axes sharding only: used on the
+        final-norm output right before the LM head, where a model-sharded
+        feature dim would conflict with the vocab dim ("model" twice in
+        one dot) and make GSPMD replicate the larger of the two."""
+        ba = batch_axes(self.mesh)
+        cands = [(ba,) + (None,) * (x.ndim - 1), (None,) * x.ndim]
+        spec = _resolve(cands, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+class NoopShardCtx:
+    def layer(self, p):
+        return p
+
+    def act(self, x):
+        return x
+
+    def batch_only(self, x):
+        return x
+
+    def expert_tensor(self, x, *, expert_axis: int):
+        return x
+
+
+def compute_params_shardings(params_tree: Any, mesh: Mesh) -> Any:
+    """Shardings for the bf16 COMPUTE copy of the weights: the storage
+    sharding with every axis except "model" dropped.
+
+    This is ZeRO-3 made explicit: master params + optimizer state live
+    fully sharded (FSDP over "data" x TP over "model"); the step casts to
+    bf16 and constrains to model-only sharding, which lowers to an
+    all-gather over "data" right before use — and the grad of that
+    constraint is the reduce-scatter. Without it GSPMD resolves the
+    batch-vs-weight "data"-axis conflict the expensive way (un-sharding
+    the batch; observed as full-batch f32 all-reduces in the dry-run).
+    Inside the period-scan only the current period's weights are gathered,
+    so the transient is one period's bf16 weights, not the whole model.
+    """
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "scan" in ps.split("/")
+        spec = spec_for(ps, leaf.shape, mesh, stacked=stacked)
+        kept = tuple(a if a == "model" else None for a in spec)
+        return NamedSharding(mesh, P(*kept))
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """(B, S, D) activations: batch over ("pod","data"), features over
+    "model" — applied via with_sharding_constraint at step boundaries."""
+    return P(batch_axes(mesh), None, "model")
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None, "model")

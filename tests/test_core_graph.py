@@ -1,0 +1,350 @@
+"""Unit tests for the VR-PRUNE MoC core: graph, analyzer, simulator,
+synthesis, explorer."""
+import numpy as np
+import pytest
+
+from repro.core import (Actor, ActorType, Dpg, Graph, Mapping, Port, PortDir,
+                        PlatformGraph, PlatformModel, ProcessingUnit, Link,
+                        Simulator, analyze, compile_local_step,
+                        repetition_vector, synthesize, Explorer)
+from repro.core.synthesis import read_mapping_file, write_mapping_file
+
+
+def _spa(name, n_in=1, n_out=1, fn=None, shape=(4,), rate=1):
+    inp = [Port(f"in{i}" if n_in > 1 else "in", PortDir.IN, rate, rate,
+                token_shape=shape) for i in range(n_in)]
+    out = [Port(f"out{i}" if n_out > 1 else "out", PortDir.OUT, rate, rate,
+                token_shape=shape) for i in range(n_out)]
+
+    def fire(inputs, state, atr):
+        toks = [t for v in inputs.values() for t in v if t is not None]
+        val = fn(toks) if fn else (toks[0] if toks else np.zeros(shape, np.float32))
+        return {p.name: [val] * atr[p.name] for p in out}, state
+
+    return Actor(name, ActorType.SPA, inp, out, fire_fn=fire)
+
+
+def _source(name, shape=(4,)):
+    out = [Port("out", PortDir.OUT, token_shape=shape)]
+
+    def fire(inputs, state, atr):
+        feed = inputs.get("__feed__")
+        tok = feed[0] if feed else np.ones(shape, np.float32)
+        return {"out": [tok]}, state
+
+    return Actor(name, ActorType.SPA, [], out, fire_fn=fire)
+
+
+def _sink(name, shape=(4,)):
+    inp = [Port("in", PortDir.IN, token_shape=shape)]
+
+    def fire(inputs, state, atr):
+        return {"result": list(inputs["in"])}, state
+
+    return Actor(name, ActorType.SPA, inp, [], fire_fn=fire)
+
+
+def chain_graph(n_mid=3, shape=(4,)):
+    g = Graph("chain")
+    prev = g.add_actor(_source("src", shape))
+    for i in range(n_mid):
+        a = g.add_actor(_spa(f"a{i}", fn=lambda ts: ts[0] + 1.0, shape=shape))
+        g.connect(prev.port("out"), a.port("in"))
+        prev = a
+    snk = g.add_actor(_sink("snk", shape))
+    g.connect(prev.port("out"), snk.port("in"))
+    return g
+
+
+class TestGraphStructure:
+    def test_ports_attached_and_lookup(self):
+        g = chain_graph()
+        assert g.actors["a0"].port("in").actor.name == "a0"
+        with pytest.raises(KeyError):
+            g.actors["a0"].port("nope")
+
+    def test_duplicate_actor_rejected(self):
+        g = chain_graph()
+        with pytest.raises(ValueError, match="duplicate"):
+            g.add_actor(_spa("a0"))
+
+    def test_token_type_mismatch_rejected(self):
+        g = Graph("t")
+        a = g.add_actor(_source("s", (4,)))
+        b = g.add_actor(_sink("k", (8,)))
+        with pytest.raises(ValueError, match="mismatch"):
+            g.connect(a.port("out"), b.port("in"))
+
+    def test_spa_with_variable_rate_rejected(self):
+        with pytest.raises(ValueError, match="variable-rate"):
+            Actor("bad", ActorType.SPA,
+                  [Port("in", PortDir.IN, lrl=1, url=4, token_shape=(2,))], [])
+
+    def test_topo_order_and_precedence(self):
+        g = chain_graph(3)
+        order = [a.name for a in g.topo_order()]
+        assert order == ["src", "a0", "a1", "a2", "snk"]
+        prec = g.precedence_index()
+        assert prec["src"] == 0 and prec["snk"] == 4
+
+    def test_zero_delay_cycle_detected_in_topo(self):
+        g = Graph("cyc")
+        a = g.add_actor(_spa("a"))
+        b = g.add_actor(_spa("b"))
+        g.connect(a.port("out"), b.port("in"))
+        g.connect(b.port("out"), a.port("in"))
+        with pytest.raises(ValueError, match="cycle"):
+            g.topo_order()
+
+    def test_token_bytes(self):
+        p = Port("x", PortDir.OUT, token_shape=(24, 24, 32), token_dtype="float32")
+        assert p.token_bytes == 73728  # the paper's L2->L3 token (Fig 2)
+
+
+class TestAnalyzer:
+    def test_valid_chain_passes(self):
+        rep = analyze(chain_graph())
+        assert rep.ok, rep.errors
+        assert set(rep.repetition_vector.values()) == {1}
+
+    def test_multirate_repetition_vector(self):
+        # src produces 2 tokens/firing, sink consumes 3 -> q = (3, 2)
+        g = Graph("mr")
+        out = [Port("out", PortDir.OUT, 2, 2, token_shape=(1,))]
+        a = g.add_actor(Actor(
+            "p", ActorType.SPA, [], out,
+            fire_fn=lambda i, s, r: ({"out": [np.zeros(1)] * 2}, s)))
+        inp = [Port("in", PortDir.IN, 3, 3, token_shape=(1,))]
+        b = g.add_actor(Actor("c", ActorType.SPA, inp, [],
+                              fire_fn=lambda i, s, r: ({}, s)))
+        g.connect(a.port("out"), b.port("in"), capacity=6)
+        rv = repetition_vector(g)
+        assert rv == {"p": 3, "c": 2}
+
+    def test_inconsistent_graph_rejected(self):
+        # Two paths with incompatible rate products -> unbalanceable.
+        g = Graph("bad")
+        s = g.add_actor(Actor(
+            "s", ActorType.SPA, [],
+            [Port("out0", PortDir.OUT, 1, 1, token_shape=(1,)),
+             Port("out1", PortDir.OUT, 2, 2, token_shape=(1,))],
+            fire_fn=lambda i, st, r: ({"out0": [0], "out1": [0, 0]}, st)))
+        t = g.add_actor(Actor(
+            "t", ActorType.SPA,
+            [Port("in0", PortDir.IN, 1, 1, token_shape=(1,)),
+             Port("in1", PortDir.IN, 1, 1, token_shape=(1,))], [],
+            fire_fn=lambda i, st, r: ({}, st)))
+        g.connect(s.port("out0"), t.port("in0"))
+        g.connect(s.port("out1"), t.port("in1"))
+        rep = analyze(g)
+        assert not rep.ok
+        assert any("inconsistent" in e for e in rep.errors)
+
+    def test_deadlock_cycle_without_delay(self):
+        g = Graph("dead")
+        a = g.add_actor(_spa("a"))
+        b = g.add_actor(_spa("b"))
+        g.connect(a.port("out"), b.port("in"))
+        g.connect(b.port("out"), a.port("in"))
+        rep = analyze(g)
+        assert not rep.ok
+        assert any("deadlock" in e for e in rep.errors)
+
+    def test_cycle_with_delay_tokens_ok(self):
+        g = Graph("fb")
+        a = g.add_actor(_spa("a"))
+        b = g.add_actor(_spa("b"))
+        g.connect(a.port("out"), b.port("in"))
+        g.connect(b.port("out"), a.port("in"), delay_tokens=1)
+        rep = analyze(g)
+        assert rep.ok, rep.errors
+
+    def test_buffer_overflow_detected(self):
+        g = Graph("ovf")
+        out = [Port("out", PortDir.OUT, 4, 4, token_shape=(1,))]
+        a = g.add_actor(Actor(
+            "p", ActorType.SPA, [], out,
+            fire_fn=lambda i, s, r: ({"out": [0] * 4}, s)))
+        inp = [Port("in", PortDir.IN, 1, 1, token_shape=(1,))]
+        b = g.add_actor(Actor("c", ActorType.SPA, inp, [],
+                              fire_fn=lambda i, s, r: ({}, s)))
+        g.connect(a.port("out"), b.port("in"), capacity=2)  # needs >= 4
+        rep = analyze(g)
+        assert not rep.ok
+        assert any("overflow" in e for e in rep.errors)
+
+    def test_dynamic_actor_outside_dpg_rejected(self):
+        g = chain_graph()
+        g.actors["a1"].actor_type = ActorType.DPA
+        rep = analyze(g)
+        assert not rep.ok
+        assert any("outside any DPG" in e for e in rep.errors)
+
+    def test_dpg_composition_rule(self):
+        # A DPG must have exactly 1 CA and 2 DAs.
+        g = chain_graph(3)
+        for n in ("a0", "a1", "a2"):
+            g.actors[n].dpg = "d"
+        g.actors["a0"].actor_type = ActorType.DA
+        g.actors["a2"].actor_type = ActorType.DA
+        g.actors["a1"].actor_type = ActorType.DPA
+        g.dpgs["d"] = Dpg("d", ca="missing", entry_da="a0", exit_da="a2",
+                          members=["a0", "a1", "a2"])
+        rep = analyze(g)
+        assert not rep.ok
+        assert any("exactly 1 CA" in e for e in rep.errors)
+
+
+class TestSimulator:
+    def test_chain_semantics(self):
+        g = chain_graph(3)
+        sim = Simulator(g)
+        res = sim.run(5)
+        assert len(res.outputs["snk"]) == 5
+        np.testing.assert_allclose(res.outputs["snk"][0],
+                                   np.ones(4, np.float32) + 3.0)
+
+    def test_source_feed(self):
+        g = chain_graph(1)
+        feeds = [np.full((4,), float(i), np.float32) for i in range(3)]
+        res = Simulator(g).run(3, source_inputs={"src": feeds})
+        for i, out in enumerate(res.outputs["snk"]):
+            np.testing.assert_allclose(out, feeds[i] + 1.0)
+
+    def test_bounded_fifo_backpressure(self):
+        # capacity-1 fifo still completes (firing rule includes space check)
+        g = Graph("bp")
+        s = g.add_actor(_source("s"))
+        a = g.add_actor(_spa("a", fn=lambda ts: ts[0]))
+        k = g.add_actor(_sink("k"))
+        g.connect(s.port("out"), a.port("in"), capacity=1)
+        g.connect(a.port("out"), k.port("in"), capacity=1)
+        res = Simulator(g).run(10)
+        assert len(res.outputs["k"]) == 10
+
+    def test_variable_rate_symmetric_requirement_enforced(self):
+        # A DPA that produces fewer tokens than atr must be rejected.
+        g = Graph("vr")
+        s = g.add_actor(_source("s", (1,)))
+        inp = [Port("in", PortDir.IN, 1, 1, token_shape=(1,))]
+        out = [Port("out", PortDir.OUT, 1, 2, token_shape=(1,))]
+
+        def bad_fire(i, st, r):
+            return {"out": [np.zeros(1)] * (r["out"] - 1)}, st  # too few!
+
+        d = g.add_actor(Actor("d", ActorType.DPA, inp, out, fire_fn=bad_fire,
+                              dpg="x"))
+        kin = [Port("in", PortDir.IN, 1, 2, token_shape=(1,))]
+        k = g.add_actor(Actor("k", ActorType.DPA, kin, [],
+                              fire_fn=lambda i, st, r: ({}, st), dpg="x"))
+        g.connect(s.port("out"), d.port("in"))
+        g.connect(d.port("out"), k.port("in"), capacity=4)
+        sim = Simulator(g, atr_fn=lambda a, i: {"out": 2} if a.name == "d" else {})
+        with pytest.raises(ValueError, match="symmetric token rate"):
+            sim.run(1)
+
+    def test_modeled_clocks_with_platform(self):
+        g = chain_graph(2)
+        g.actors["a0"].cost_flops = 1e9
+        g.actors["a1"].cost_flops = 2e9
+        pg = PlatformGraph("p")
+        pg.add_unit(ProcessingUnit("endpoint", flops=1e9))
+        pg.add_unit(ProcessingUnit("server", flops=2e9))
+        pg.add_link(Link("endpoint", "server", bandwidth=1e6))
+        m = Mapping("m", {"src": "endpoint", "a0": "endpoint",
+                          "a1": "server", "snk": "server"}, pg)
+        res = Simulator(g, mapping=m, platform=PlatformModel(pg)).run(1)
+        assert res.unit_busy_s["endpoint"] == pytest.approx(1.0)
+        assert res.unit_busy_s["server"] == pytest.approx(1.0)
+        # one 16-byte token crossed the boundary
+        assert sum(res.link_busy_s.values()) == pytest.approx(16 / 1e6)
+
+
+class TestSynthesis:
+    def test_split_and_channels(self):
+        g = chain_graph(3)
+        m = Mapping("m", {"src": "ep", "a0": "ep", "a1": "sv", "a2": "sv",
+                          "snk": "sv"})
+        prog = synthesize(g, m)
+        assert [s.unit for s in prog.stages] == ["ep", "sv"]
+        assert len(prog.channels) == 1
+        ch = prog.channels[0]
+        assert (ch.src_actor, ch.dst_actor) == ("a0", "a1")
+        assert ch.token_bytes == 16
+
+    def test_run_local_matches_simulator(self):
+        g = chain_graph(4)
+        m = Mapping("m", {"src": "ep", "a0": "ep", "a1": "sv", "a2": "sv",
+                          "a3": "sv", "snk": "sv"})
+        prog = synthesize(g, m)
+        feed = np.arange(4, dtype=np.float32)
+        out_staged = prog.run_local({"src": feed})
+        out_sim = Simulator(g).run(1, source_inputs={"src": [feed]})
+        np.testing.assert_allclose(out_staged["snk"][0],
+                                   out_sim.outputs["snk"][0])
+
+    def test_tx_rx_insertion_is_transparent(self):
+        """Sec III.B: distribution requires no changes to the app graph —
+        every partition point yields identical results."""
+        g = chain_graph(4)
+        feed = np.arange(4, dtype=np.float32)
+        ref = None
+        for pp in range(1, 7):
+            m = Mapping.partition_point(g, pp, endpoint="ep", server="sv")
+            out = synthesize(g, m).run_local({"src": feed})["snk"][0]
+            if ref is None:
+                ref = out
+            np.testing.assert_allclose(out, ref)
+
+    def test_mapping_file_roundtrip(self, tmp_path):
+        g = chain_graph(2)
+        m = Mapping.partition_point(g, 2, endpoint="ep", server="sv")
+        p = str(tmp_path / "m.json")
+        write_mapping_file(p, m, local_unit="ep")
+        m2 = read_mapping_file(p)
+        assert m2.assignment == m.assignment
+
+
+class TestExplorer:
+    def _graph_with_costs(self):
+        g = chain_graph(3)
+        # Decreasing token sizes along the chain favour later partition pts.
+        for name, fl in [("src", 0.0), ("a0", 5e6), ("a1", 5e6), ("a2", 5e6),
+                         ("snk", 0.0)]:
+            g.actors[name].cost_flops = fl
+        return g
+
+    def _platform(self):
+        pg = PlatformGraph("toy")
+        pg.add_unit(ProcessingUnit("endpoint", flops=1e9))
+        pg.add_unit(ProcessingUnit("server", flops=100e9))
+        pg.add_link(Link("endpoint", "server", bandwidth=1e6, latency_s=0.0))
+        return pg
+
+    def test_sweep_covers_all_partition_points(self):
+        g = self._graph_with_costs()
+        res = Explorer(g, self._platform()).evaluate_modeled()
+        assert len(res.records) == len(g.actors)
+        assert res.records[-1].transfer_s == 0.0  # full endpoint: no tx
+
+    def test_offload_wins_with_fast_link_slow_endpoint(self):
+        g = self._graph_with_costs()
+        res = Explorer(g, self._platform()).evaluate_modeled()
+        # endpoint compute = 15ms total; boundary token = 16B ~ 16us
+        best = res.best()
+        assert best.pp == 1  # ship everything to the 100x faster server
+        assert res.speedup() > 2
+
+    def test_privacy_constraint_excludes_raw_offload(self):
+        g = self._graph_with_costs()
+        res = Explorer(g, self._platform()).evaluate_modeled()
+        assert res.best(privacy=True).pp > 1
+
+    def test_artifact_generation(self, tmp_path):
+        g = self._graph_with_costs()
+        ex = Explorer(g, self._platform())
+        paths = ex.generate_artifacts(str(tmp_path))
+        # N actors -> N mapping pairs + 1 profiling script
+        assert len(paths) == 2 * len(g.actors) + 1
+        m = read_mapping_file(paths[0])
+        assert set(m.assignment) == set(g.actors)

@@ -1,0 +1,70 @@
+"""The roofline analysis hinges on the HLO collective-bytes parser:
+test it on synthetic HLO text covering loop-trip weighting, nesting,
+tuples, and shape-byte math. (Import is safe: dryrun.py only sets
+XLA_FLAGS, which pytest workers ignore since jax is already initialized
+by earlier imports in the suite.)"""
+from __future__ import annotations
+
+import sys
+
+
+def _parse(text):
+    # import without tripping device-count init order issues
+    import repro.launch.dryrun as dr
+    return dr.collective_bytes(text)
+
+
+HLO = """
+HloModule jit_step
+
+%cond.1 (arg: (s32[], f32[8])) -> pred[] {
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %trip = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%iv, %trip), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %x = f32[8]{0} get-tuple-element(%arg), index=1
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1
+  ROOT %t = (s32[], f32[8]) tuple(%iv2, %ar)
+}
+
+%cond.2 (arg2: (s32[], f32[4])) -> pred[] {
+  %iv3 = s32[] get-tuple-element(%arg2), index=0
+  %trip2 = s32[] constant(3)
+  ROOT %cmp2 = pred[] compare(%iv3, %trip2), direction=LT
+}
+
+%body.2 (arg2: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %y = f32[4]{0} get-tuple-element(%arg2), index=1
+  %inner = (s32[], f32[8]) while(%w0), condition=%cond.1, body=%body.1
+  %ag = bf16[16,4]{1,0} all-gather(%yy), channel_id=2
+  ROOT %t2 = (s32[], f32[4]) tuple(%iv4, %y)
+}
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %outer = (s32[], f32[4]) while(%init), condition=%cond.2, body=%body.2
+  %top = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%a, %b), channel_id=3
+  ROOT %r = f32[4]{0} copy(%p0)
+}
+"""
+
+
+def test_collective_bytes_loop_weighting_and_shapes():
+    out = _parse(HLO)
+    # all-reduce f32[8] = 32 B, inside body.1 (trip 5) nested in body.2
+    # (trip 3) -> 32 * 15 = 480
+    assert out["all-reduce"] == 480.0
+    # all-gather bf16[16,4] = 128 B, inside body.2 (trip 3) -> 384
+    assert out["all-gather"] == 384.0
+    # tuple all-to-all at top level: 2 * f32[2,2] = 32 B
+    assert out["all-to-all"] == 32.0
+    assert out["total"] == 480.0 + 384.0 + 32.0
+
+
+def test_shape_bytes():
+    import repro.launch.dryrun as dr
+    assert dr._shape_bytes("f32[2,3]{1,0}") == 24
+    assert dr._shape_bytes("(bf16[4]{0}, s32[2]{0})") == 8 + 8
+    assert dr._shape_bytes("pred[10]{0}") == 10
+    assert dr._shape_bytes("f32[]") == 0 or dr._shape_bytes("f32[]") == 4

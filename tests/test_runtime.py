@@ -1,0 +1,106 @@
+"""Runtime integration: the optimizer actually learns (copy task), the
+serving engine generates coherently with caches, checkpoints round-trip,
+and grad accumulation equals the monolithic step."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import checkpoint, data, optim
+from repro.runtime.serving import Request, ServeEngine
+from repro.runtime.trainstep import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+
+
+def test_training_learns_copy_task():
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY)
+    opt = optim.init(params)
+    step = jax.jit(make_train_step(
+        cfg, optim.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=200,
+                               weight_decay=0.0)))
+    gen = data.copy_task_batches(16, 16, cfg.vocab_size, seed=1)
+    losses = []
+    for i, batch in zip(range(150), gen):
+        params, opt, m = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+    assert losses[-1] < 1.0, losses[-1]
+
+
+def test_grad_accumulation_matches_monolithic():
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY)
+    opt = optim.init(params)
+    oc = optim.AdamWConfig(lr=1e-3, warmup_steps=1)
+    batch = next(data.lm_batches(8, 16, cfg.vocab_size))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    p1, _, m1 = jax.jit(make_train_step(cfg, oc))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, oc, microbatches=4))(
+        params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    # fp32 reduction order differs between the two paths; Adam's
+    # rsqrt(v)+eps amplifies that slightly on near-zero-grad params
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_serving_engine_greedy_matches_forward_argmax():
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_len=64)
+    prompts = [np.arange(8, dtype=np.int32) % cfg.vocab_size,
+               (np.arange(8, dtype=np.int32) * 3) % cfg.vocab_size]
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    outs = eng.generate(reqs)
+    assert [o.id for o in outs] == [0, 1]
+    # oracle: step-by-step full forward argmax
+    for o, prompt in zip(outs, prompts):
+        toks = list(prompt)
+        for expected in o.tokens:
+            logits, _ = T.forward(
+                params, cfg,
+                {"tokens": jnp.asarray(np.array(toks)[None])}, train=False)
+            assert int(jnp.argmax(logits[0, -1])) == expected
+            toks.append(expected)
+
+
+def test_checkpoint_roundtrip():
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        checkpoint.save(path, params, meta={"step": 3, "cfg": cfg.name})
+        template = jax.eval_shape(lambda: params)
+        restored = checkpoint.restore(path, template)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert checkpoint.load_meta(path)["step"] == 3
+
+
+def test_lm_batches_deterministic_and_in_range():
+    g1 = data.lm_batches(4, 32, 100, seed=5)
+    g2 = data.lm_batches(4, 32, 100, seed=5)
+    b1, b2 = next(g1), next(g2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 100
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
