@@ -32,10 +32,22 @@ class Row:
 HEADER = "bench,name,value,unit,paper_anchor,rel_err"
 
 
-def emit(rows: List[Row], *, save_as: Optional[str] = None) -> None:
+def emit(rows: List[Row], *, save_as: Optional[str] = None,
+         out_path: Optional[str] = None) -> None:
+    """Print rows as CSV; optionally dump JSON to ``RESULTS_DIR/save_as``
+    (the benchmarks.run registry path) or to an explicit ``out_path``
+    (standalone CLIs / CI artifacts)."""
     for r in rows:
         print(r.csv())
+    paths = []
     if save_as:
         os.makedirs(RESULTS_DIR, exist_ok=True)
-        with open(os.path.join(RESULTS_DIR, save_as), "w") as fh:
+        paths.append(os.path.join(RESULTS_DIR, save_as))
+    if out_path:
+        parent = os.path.dirname(out_path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        paths.append(out_path)
+    for p in paths:
+        with open(p, "w") as fh:
             json.dump([dataclasses.asdict(r) for r in rows], fh, indent=1)

@@ -1,12 +1,15 @@
-"""End-to-end driver: serve a small LLM with batched requests, both
-monolithic and through an Edge-PRUNE partitioned actor graph.
+"""End-to-end driver: serve a small LLM with batched requests — static
+buckets, the continuous-batching scheduler, and an Edge-PRUNE partitioned
+actor graph streamed through a pipelined 2-unit schedule.
 
 The partitioned path is the paper's collaborative-inference scenario:
 the model's early layer-group actors run on the "endpoint" unit, the
 rest on the "server"; the synthesis step auto-inserts the TX/RX channel
 at the boundary and the prefill executes stage-by-stage. We verify both
-paths produce identical logits and report the boundary traffic per
-request — the quantity the paper's Figs 4-6 trade against compute.
+paths produce identical logits, report the boundary traffic per request
+— the quantity the paper's Figs 4-6 trade against compute — and show the
+modeled pipelining win of overlapping stage k of frame i with stage k-1
+of frame i+1 (Sec III.B).
 
 Run: PYTHONPATH=src python examples/distributed_serving.py
 """
@@ -15,7 +18,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import Mapping
+from repro.core import Mapping, PlatformModel, paper_platform
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.serving import (PartitionedServeEngine, Request,
@@ -29,15 +32,25 @@ cfg = ModelConfig(
 params = T.init_params(cfg, jax.random.PRNGKey(0))
 print(f"model: {cfg.name}, ~{cfg.param_count()/1e6:.1f}M params")
 
-# --- batched monolithic serving -------------------------------------------
+# --- batched monolithic serving: static buckets vs continuous --------------
 rng = np.random.RandomState(0)
-reqs = [Request(i, rng.randint(0, cfg.vocab_size, 48).astype(np.int32),
+reqs = [Request(i, rng.randint(0, cfg.vocab_size,
+                               (32, 48)[i % 2]).astype(np.int32),
                 max_new_tokens=24) for i in range(8)]
 eng = ServeEngine(cfg, params, max_len=96)
 outs = eng.generate(reqs)
 tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
-print(f"served {len(outs)} requests, decode throughput {tput:.1f} tok/s")
+print(f"static-bucket: served {len(outs)} requests, ~{tput:.1f} tok/s")
 print(f"req 0 continuation: {outs[0].tokens}")
+
+cont = ServeEngine(cfg, params, max_len=96, mode="continuous", max_slots=4)
+arrivals = list(np.cumsum(np.full(len(reqs), 0.01)))   # 100 req/s stream
+couts = cont.generate(reqs, arrivals=arrivals)
+assert [c.tokens for c in couts] == [o.tokens for o in outs], \
+    "continuous scheduler must emit the same greedy tokens"
+print(f"continuous:    same tokens over 4 slots; mean ttft "
+      f"{np.mean([c.ttft_s for c in couts])*1e3:.1f} ms, "
+      f"{len(cont.scheduler.events)} admission-queue events")
 
 # --- Edge-PRUNE partitioned inference --------------------------------------
 g = T.to_actor_graph(cfg, params, batch=1, seq=48, group_size=2)
@@ -48,9 +61,9 @@ for pp in (2, 3, 4):
                                   for i, n in enumerate(names)})
     pse = PartitionedServeEngine(cfg, params, mapping, batch=1, seq=48,
                                  group_size=2)
-    logits = pse.infer(reqs[0].prompt[None])
+    logits = pse.infer(reqs[1].prompt[None])
     mono, _ = T.forward(params, cfg,
-                        {"tokens": jax.numpy.asarray(reqs[0].prompt[None])},
+                        {"tokens": jax.numpy.asarray(reqs[1].prompt[None])},
                         train=False)
     ok = np.allclose(np.asarray(logits), np.asarray(mono), rtol=2e-4,
                      atol=2e-4)
@@ -59,3 +72,19 @@ for pp in (2, 3, 4):
     assert ok
 print("\npartitioned inference is bit-compatible with monolithic — the "
       "mapping is a pure deployment decision (Edge-PRUNE Sec III.B).")
+
+# --- pipelined multi-frame streaming over the partition --------------------
+mapping = Mapping("pp3", {n: ("endpoint" if i < 3 else "server")
+                          for i, n in enumerate(names)})
+pse = PartitionedServeEngine(cfg, params, mapping, batch=1, seq=48,
+                             group_size=2)
+pm = PlatformModel(paper_platform("N2", "wifi"))
+frames = [rng.randint(0, cfg.vocab_size, (1, 48)).astype(np.int32)
+          for _ in range(8)]
+piped, sched = pse.infer_pipelined(frames, platform=pm)
+local = pse.infer(frames[0])
+assert np.array_equal(np.asarray(piped[0]), np.asarray(local))
+print(f"\npipelined stream of {len(frames)} frames on N2/i7 over WiFi: "
+      f"modeled makespan {sched.makespan_s*1e3:.1f} ms vs sequential "
+      f"{sched.sequential_s*1e3:.1f} ms — {sched.speedup:.2f}x from "
+      f"client/server overlap (the Fig 6 effect).")

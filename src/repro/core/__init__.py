@@ -16,9 +16,10 @@ from repro.core.simulator import SimResult, Simulator
 from repro.core.mapping import (Link, Mapping, PlatformGraph, PlatformModel,
                                 ProcessingUnit, paper_platform,
                                 tpu_pod_platform)
-from repro.core.synthesis import (Channel, Stage, StagedProgram, StageFn,
-                                  compile_local_step, read_mapping_file,
-                                  synthesize, write_mapping_file)
+from repro.core.synthesis import (Channel, PipelineSchedule, Stage, StagedProgram,
+                                  StageExec, StageFn, compile_local_step,
+                                  read_mapping_file, synthesize,
+                                  write_mapping_file)
 from repro.core.explorer import ExplorationResult, Explorer, PartitionRecord
 
 __all__ = [
@@ -28,7 +29,8 @@ __all__ = [
     "SimResult", "Simulator",
     "Link", "Mapping", "PlatformGraph", "PlatformModel", "ProcessingUnit",
     "paper_platform", "tpu_pod_platform",
-    "Channel", "Stage", "StagedProgram", "StageFn", "compile_local_step",
+    "Channel", "PipelineSchedule", "Stage", "StagedProgram", "StageExec",
+    "StageFn", "compile_local_step",
     "read_mapping_file", "synthesize", "write_mapping_file",
     "ExplorationResult", "Explorer", "PartitionRecord",
 ]

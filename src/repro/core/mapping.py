@@ -93,6 +93,11 @@ class PlatformModel:
             return pinned[unit]
         return self.compute_time_s(unit, actor.cost_flops, actor.cost_mem_bytes)
 
+    def stage_time_s(self, unit: str, actors) -> float:
+        """Modeled time for one pipeline stage: every actor mapped to
+        ``unit`` firing once (one graph iteration's worth of work)."""
+        return sum(self.actor_time_s(unit, a) for a in actors)
+
     def transfer_bw_time_s(self, src_unit: str, dst_unit: str,
                            nbytes: int) -> float:
         if src_unit == dst_unit:
@@ -116,6 +121,20 @@ class PlatformModel:
 
     def tx_cpu_time_s(self, src_unit: str, nbytes: int) -> float:
         return self.platform.units[src_unit].tx_cost_per_byte * nbytes
+
+    def boundary_charge_s(self, src_unit: str, dst_unit: str,
+                          nbytes: int) -> Tuple[float, float, float, float]:
+        """The single source of truth for how a cross-unit transfer is
+        charged on pipelined clocks. Returns ``(cpu_s, link_s,
+        sender_block_s, token_delay_s)`` relative to the sender's compute
+        finish: the sender stays busy for its CPU readback/syscall cost
+        plus — on additive (non-overlapping) links — the wire time; the
+        token lands at the receiver after CPU + wire time either way."""
+        link_s = self.transfer_time_s(src_unit, dst_unit, nbytes)
+        cpu_s = self.tx_cpu_time_s(src_unit, nbytes)
+        block_s = cpu_s + (0.0 if self.link_overlaps(src_unit, dst_unit)
+                           else link_s)
+        return cpu_s, link_s, block_s, cpu_s + link_s
 
 
 class Mapping:

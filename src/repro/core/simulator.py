@@ -40,17 +40,29 @@ class FiringRecord:
     wall_s: float
     modeled_s: float
     unit: str
+    # Pipelined-clock timeline: when this firing started/finished on its
+    # unit's concurrent busy clock (0.0/modeled_s without a platform).
+    start_s: float = 0.0
+    finish_s: float = 0.0
 
 
 @dataclass
 class SimResult:
     outputs: Dict[str, List[Any]]
     firings: List[FiringRecord] = field(default_factory=list)
-    # Per processing unit: total modeled busy seconds.
+    # Per processing unit: total modeled busy seconds (compute only — the
+    # Figs 4-6 accounting; sender-side TX CPU cost is ledgered apart).
     unit_busy_s: Dict[str, float] = field(default_factory=dict)
     # Modeled seconds spent on boundary (TX/RX) transfers, per edge.
     link_busy_s: Dict[str, float] = field(default_factory=dict)
+    # Sender-side CPU cost of boundary transfers (readback + syscalls),
+    # per unit. Charged to the sender's concurrent clock as well.
+    tx_cpu_busy_s: Dict[str, float] = field(default_factory=dict)
     wall_total_s: float = 0.0
+    # Modeled completion time with per-device busy clocks advancing
+    # concurrently (pipelined client/server execution, Sec III.B). The
+    # sequential reference is ``modeled_total_s()``.
+    modeled_makespan_s: float = 0.0
 
     @property
     def modeled_endpoint_s(self) -> float:
@@ -59,17 +71,32 @@ class SimResult:
         return sum(v for k, v in self.unit_busy_s.items() if not k.startswith("server"))
 
     def modeled_total_s(self) -> float:
-        return sum(self.unit_busy_s.values()) + sum(self.link_busy_s.values())
+        return (sum(self.unit_busy_s.values())
+                + sum(self.link_busy_s.values())
+                + sum(self.tx_cpu_busy_s.values()))
+
+    @property
+    def pipeline_speedup(self) -> float:
+        """Sequential / pipelined modeled time — the overlap win."""
+        if not self.modeled_makespan_s:
+            return 1.0
+        return self.modeled_total_s() / self.modeled_makespan_s
 
 
 class FifoState:
-    """Run-time state of one FIFO edge: a bounded token deque."""
+    """Run-time state of one FIFO edge: a bounded token deque.
+
+    Each token carries a modeled *availability timestamp* (when it lands
+    at the consuming unit) in a parallel deque, so the event loop can
+    advance per-device clocks concurrently."""
 
     def __init__(self, f: Fifo):
         self.fifo = f
         self.q: deque = deque()
+        self.ts: deque = deque()
         for _ in range(f.delay_tokens):
             self.q.append(None)  # initial delay tokens carry no payload
+            self.ts.append(0.0)
 
     def can_pop(self, n: int) -> bool:
         return len(self.q) >= n
@@ -78,14 +105,24 @@ class FifoState:
         return len(self.q) + n <= self.fifo.capacity
 
     def pop(self, n: int) -> List[Any]:
-        return [self.q.popleft() for _ in range(n)]
+        return self.pop_timed(n)[0]
 
-    def push(self, toks: List[Any]) -> None:
+    def pop_timed(self, n: int) -> Tuple[List[Any], float]:
+        """Pop ``n`` tokens; also return when the last became available."""
+        ready = 0.0
+        toks = []
+        for _ in range(n):
+            ready = max(ready, self.ts.popleft())
+            toks.append(self.q.popleft())
+        return toks, ready
+
+    def push(self, toks: List[Any], ready_s: float = 0.0) -> None:
         if len(self.q) + len(toks) > self.fifo.capacity:
             raise OverflowError(
                 f"fifo {self.fifo.name} overflow: {len(self.q)}+{len(toks)} > "
                 f"{self.fifo.capacity}")
         self.q.extend(toks)
+        self.ts.extend([ready_s] * len(toks))
 
 
 class Simulator:
@@ -135,6 +172,7 @@ class Simulator:
         order = self.g.topo_order()
         t0 = time.perf_counter()
         src_feed = source_inputs or {}
+        unit_clock: Dict[str, float] = {}
 
         steps = 0
         progress = True
@@ -152,8 +190,14 @@ class Simulator:
                             for p in a.out_ports if p.fifo is not None)
                 if not (ready and space):
                     continue
-                inputs = {p.name: fstate[p.fifo.name].pop(rates[p.name])
-                          for p in a.in_ports if p.fifo is not None}
+                inputs = {}
+                in_ready = 0.0
+                for p in a.in_ports:
+                    if p.fifo is None:
+                        continue
+                    toks, t_ready = fstate[p.fifo.name].pop_timed(rates[p.name])
+                    inputs[p.name] = toks
+                    in_ready = max(in_ready, t_ready)
                 if a.is_source and a.name in src_feed:
                     inputs["__feed__"] = [src_feed[a.name][fired[a.name]]]
                 tstart = time.perf_counter()
@@ -168,8 +212,14 @@ class Simulator:
                 if self.platform is not None:
                     modeled = self.platform.actor_time_s(unit, a)
                 result.unit_busy_s[unit] = result.unit_busy_s.get(unit, 0.0) + modeled
+                # Concurrent per-device clocks: the firing starts once its
+                # inputs have landed AND its unit is free; devices overlap.
+                mstart = max(in_ready, unit_clock.get(unit, 0.0))
+                mfinish = mstart + modeled
                 result.firings.append(FiringRecord(a.name, fired[a.name], wall,
-                                                   modeled, unit))
+                                                   modeled, unit,
+                                                   start_s=mstart,
+                                                   finish_s=mfinish))
                 for p in a.out_ports:
                     if p.fifo is None:
                         continue
@@ -179,14 +229,26 @@ class Simulator:
                             f"{a.name} produced {len(toks)} tokens on {p.name}, "
                             f"atr says {rates[p.name]} (symmetric token rate "
                             f"requirement violated)")
-                    fstate[p.fifo.name].push(toks)
                     # TX/RX modeled link charge when the edge crosses units.
                     dst_unit = self._unit(p.fifo.dst.actor)
+                    tok_ready = mfinish
                     if self.platform is not None and dst_unit != unit:
-                        link_s = self.platform.transfer_time_s(
-                            unit, dst_unit, p.token_bytes * rates[p.name])
+                        cpu_s, link_s, block_s, delay_s = (
+                            self.platform.boundary_charge_s(
+                                unit, dst_unit,
+                                p.token_bytes * rates[p.name]))
                         result.link_busy_s[p.fifo.name] = (
                             result.link_busy_s.get(p.fifo.name, 0.0) + link_s)
+                        result.tx_cpu_busy_s[unit] = (
+                            result.tx_cpu_busy_s.get(unit, 0.0) + cpu_s)
+                        tok_ready = mfinish + delay_s
+                        mfinish += block_s
+                    fstate[p.fifo.name].push(toks, tok_ready)
+                    result.modeled_makespan_s = max(result.modeled_makespan_s,
+                                                    tok_ready)
+                unit_clock[unit] = mfinish
+                result.modeled_makespan_s = max(result.modeled_makespan_s,
+                                                mfinish)
                 if a.is_sink:
                     # Sinks with no out ports: capture whatever fire returned
                     # under the reserved key "result".

@@ -30,6 +30,12 @@ def main() -> None:
     ap.add_argument("--partition", type=int, default=None,
                     help="also run Edge-PRUNE partitioned inference with "
                          "this many actors on the 'endpoint' unit")
+    ap.add_argument("--mode", default="static-bucket",
+                    choices=("static-bucket", "continuous"),
+                    help="request scheduler: static same-length buckets or "
+                         "continuous batching over KV slots")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode batch width in continuous mode")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
@@ -47,7 +53,9 @@ def main() -> None:
             r.embeds = rng.randn(args.prompt_len,
                                  cfg.frontend_dim).astype(np.float32)
         reqs.append(r)
-    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.max_new + 8)
+    eng = ServeEngine(cfg, params,
+                      max_len=args.prompt_len + args.max_new + 8,
+                      mode=args.mode, max_slots=args.slots)
     outs = eng.generate(reqs)
     tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
     for o in outs[:4]:

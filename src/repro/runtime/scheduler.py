@@ -1,0 +1,274 @@
+"""Continuous-batching request scheduler (slot-based KV cache reuse).
+
+The static-bucket ``ServeEngine`` path groups requests by prompt length
+and decodes each bucket to completion with its own compiled
+``(batch, prompt_len)`` functions: a new bucket shape means a new XLA
+compile, and a short request parks its finished KV rows in the batch
+until the longest request in the bucket drains.
+
+The scheduler replaces that with the continuous-batching pattern:
+
+* one decode function compiled ONCE at a fixed slot count ``max_slots`` —
+  requests join and leave the running batch without recompiling;
+* a persistent slot-based KV cache (``init_cache(cfg, max_slots,
+  max_len)``): admitting a request prefills it at batch=1 and writes the
+  resulting cache rows into a free slot; evicting just frees the slot
+  index (``cache_len`` masking makes stale rows unreachable);
+* an admission queue: requests arrive (optionally timestamped, e.g.
+  Poisson arrivals in the serving bench), wait FIFO for a free slot, and
+  are admitted *between* decode steps — work is re-admitted mid-flight
+  exactly as the fault-tolerant Edge-PRUNE follow-up assumes.
+
+Per-slot ``cache_len`` is what makes the shared batch sound: the decode
+attention masks every cache row at position >= cache_len[slot], so slots
+holding different-length contexts (or nothing at all) coexist in one
+batched step. Under greedy sampling the emitted tokens are bit-identical
+to the static-bucket path (see tests/test_scheduler.py).
+
+``Request``/``Completion`` live here (serving.py re-exports them) so the
+engine can delegate without an import cycle.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def sample_tokens(key: jax.Array, logits: jax.Array, *, greedy: bool,
+                  temperature: float) -> Tuple[jax.Array, jax.Array]:
+    """Shared sampling rule for both scheduler modes — the continuous ==
+    static token-identity contract depends on there being exactly one.
+    Returns (tokens (B,) int32, next key)."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+    key, sub = jax.random.split(key)
+    return jax.random.categorical(
+        sub, logits / temperature, axis=-1).astype(jnp.int32), key
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    embeds: Optional[np.ndarray] = None     # VLM/audio frontend output
+
+
+@dataclass
+class Completion:
+    id: int
+    tokens: List[int]
+    prefill_s: float
+    decode_s: float
+    # Continuous-scheduler timeline (engine-clock seconds; 0.0 on the
+    # static path which has no per-request timeline).
+    arrival_s: float = 0.0
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (admission wait + prefill)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+def validate_request_fits(cfg: ModelConfig, req: Request,
+                          max_len: int) -> None:
+    """Shared admission check for both engine modes. Decode writes KV
+    rows at positions len(prompt) .. len(prompt) + max_new_tokens - 2;
+    on an uncapped global-attention cache, rows past max_len would
+    silently wrap the ring onto the prompt and corrupt the context.
+    Sliding-window / recurrent (subquadratic) configs and explicitly
+    capped caches (max_cache_len) wrap by design and are exempt."""
+    if len(req.prompt) > max_len:
+        raise ValueError(
+            f"request {req.id}: prompt length {len(req.prompt)} exceeds "
+            f"max_len {max_len}")
+    if cfg.is_subquadratic_decode or cfg.max_cache_len:
+        return
+    need = len(req.prompt) + req.max_new_tokens - 1
+    if need > max_len:
+        raise ValueError(
+            f"request {req.id}: prompt ({len(req.prompt)}) + "
+            f"max_new_tokens ({req.max_new_tokens}) needs {need} cache "
+            f"rows, exceeding max_len {max_len}")
+
+
+@dataclass
+class SchedulerConfig:
+    max_slots: int = 8          # decode batch width (compiled once)
+    max_len: int = 512          # KV cache length per slot
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+@dataclass
+class SchedEvent:
+    """Observable admission/eviction trace (asserted on by tests)."""
+    t_s: float
+    kind: str                   # "admit" | "evict"
+    request_id: int
+    slot: int
+    step: int                   # decode-step counter at event time
+
+
+@dataclass
+class _Ticket:
+    req: Request
+    arrival_s: float
+    slot: int = -1
+    emitted: List[int] = field(default_factory=list)
+    prefill_s: float = 0.0
+    first_token_s: float = 0.0
+
+
+class ContinuousScheduler:
+    """Admission queue + shared decode batch over a slot-based KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 sched: Optional[SchedulerConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.sched = sched or SchedulerConfig()
+        s = self.sched
+        self.key = jax.random.PRNGKey(s.seed)
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, max_len=s.max_len))
+        self._decode = jax.jit(
+            lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache, clen))
+        self._insert = jax.jit(self._insert_impl)
+        # Persistent slot state. cache_len/tokens are host-side mirrors so
+        # admission/eviction never touches device state beyond the insert.
+        self.cache = T.init_cache(cfg, s.max_slots, s.max_len)
+        self.cache_len = np.zeros((s.max_slots,), np.int32)
+        self.tokens = np.zeros((s.max_slots,), np.int32)
+        self.free: List[int] = list(range(s.max_slots))[::-1]  # pop() -> 0,1,..
+        self.active: Dict[int, _Ticket] = {}
+        self.queue: deque = deque()     # tickets waiting for a slot (FIFO)
+        self.backlog: List[_Ticket] = []  # submitted, not yet "arrived"
+        self.events: List[SchedEvent] = []
+        self.step_count = 0
+
+    # -- slot cache surgery -------------------------------------------------
+
+    @staticmethod
+    def _insert_impl(batch_cache, req_cache, slot):
+        """Write a batch=1 prefill cache into slot ``slot`` of the shared
+        batch cache. Scanned-period leaves are (P, B, ...), remainder
+        leaves (B, ...)."""
+        scan = jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
+                            batch_cache["scan"], req_cache["scan"])
+        rem = jax.tree.map(lambda big, small: big.at[slot].set(small[0]),
+                           batch_cache["rem"], req_cache["rem"])
+        return {"scan": scan, "rem": rem}
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        toks, self.key = sample_tokens(self.key, logits,
+                                       greedy=self.sched.greedy,
+                                       temperature=self.sched.temperature)
+        return toks
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request, arrival_s: float = 0.0) -> None:
+        validate_request_fits(self.cfg, req, self.sched.max_len)
+        self.backlog.append(_Ticket(req=req, arrival_s=arrival_s))
+
+    def run(self) -> List[Completion]:
+        """Drain every submitted request; returns completions by id."""
+        t0 = time.perf_counter()
+        out: List[Completion] = []
+        self.backlog.sort(key=lambda t: t.arrival_s)
+        while self.backlog or self.queue or self.active:
+            now = time.perf_counter() - t0
+            while self.backlog and self.backlog[0].arrival_s <= now:
+                self.queue.append(self.backlog.pop(0))
+            if not self.queue and not self.active:
+                # idle until the next arrival (virtual clock = wall clock)
+                time.sleep(max(0.0, self.backlog[0].arrival_s - now))
+                continue
+            self._admit(t0)
+            if self.active:
+                out.extend(self._decode_step(t0))
+        return sorted(out, key=lambda c: c.id)
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, t0: float) -> None:
+        while self.free and self.queue:
+            ticket = self.queue.popleft()
+            slot = self.free.pop()
+            r = ticket.req
+            batch = {"tokens": jnp.asarray(r.prompt[None])}
+            if r.embeds is not None:
+                batch["embeds"] = jnp.asarray(r.embeds[None])
+            tp = time.perf_counter()
+            logits, req_cache, clen = jax.block_until_ready(
+                self._prefill(self.params, batch))
+            self.cache = self._insert(self.cache, req_cache,
+                                      jnp.int32(slot))
+            ticket.prefill_s = time.perf_counter() - tp
+            first = int(self._sample(logits)[0])
+            ticket.emitted.append(first)
+            ticket.first_token_s = time.perf_counter() - t0
+            ticket.slot = slot
+            self.cache_len[slot] = int(clen[0])
+            self.tokens[slot] = first
+            self.active[slot] = ticket
+            self.events.append(SchedEvent(ticket.first_token_s, "admit",
+                                          r.id, slot, self.step_count))
+
+    def _finished(self, ticket: _Ticket) -> bool:
+        return len(ticket.emitted) >= ticket.req.max_new_tokens
+
+    def _decode_step(self, t0: float) -> List[Completion]:
+        done: List[Completion] = []
+        # Requests satisfied by the prefill token alone never decode.
+        for slot in [s for s, tk in self.active.items() if self._finished(tk)]:
+            done.append(self._evict(slot, t0))
+        if not self.active:
+            return done
+        logits, self.cache, _ = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.cache_len))
+        toks = np.asarray(self._sample(logits))
+        self.step_count += 1
+        for slot in self.active:     # free slots keep cache_len == 0
+            self.cache_len[slot] += 1
+        for slot, ticket in list(self.active.items()):
+            t = int(toks[slot])
+            if ticket.req.eos is not None and t == ticket.req.eos:
+                done.append(self._evict(slot, t0))
+                continue
+            ticket.emitted.append(t)
+            self.tokens[slot] = t
+            if self._finished(ticket):
+                done.append(self._evict(slot, t0))
+        return done
+
+    def _evict(self, slot: int, t0: float) -> Completion:
+        ticket = self.active.pop(slot)
+        self.free.append(slot)
+        self.cache_len[slot] = 0
+        now = time.perf_counter() - t0
+        self.events.append(SchedEvent(now, "evict", ticket.req.id, slot,
+                                      self.step_count))
+        return Completion(
+            ticket.req.id, ticket.emitted, ticket.prefill_s,
+            now - ticket.first_token_s, arrival_s=ticket.arrival_s,
+            first_token_s=ticket.first_token_s, finish_s=now)

@@ -1,11 +1,17 @@
-"""Batched serving engine: prefill + decode loop over a request batch.
+"""Batched serving engine: static-bucket and continuous-batching modes.
 
-The engine compiles two functions per (batch, prompt_len) bucket —
-``prefill`` and ``decode_step`` — and greedily decodes until every
-request hits its max_new_tokens or emits ``eos``. Requests are grouped
-into same-length buckets (left-truncation to the bucket length); this is
-the standard static-bucket serving pattern and is exactly what the
-decode_32k / long_500k dry-run shapes lower.
+``mode="static-bucket"`` (the seed path) compiles two functions per
+(batch, prompt_len) bucket — ``prefill`` and ``decode_step`` — and
+greedily decodes each bucket until every request hits its max_new_tokens
+or emits ``eos``. Kept as the baseline: it is exactly what the
+decode_32k / long_500k dry-run shapes lower, but every new bucket shape
+recompiles and short requests wait for the longest in their bucket.
+
+``mode="continuous"`` delegates to ``runtime.scheduler.
+ContinuousScheduler``: one decode function compiled once at a fixed slot
+count, slot-based KV cache reuse, and per-step admission/eviction —
+requests join and leave the running batch between decode steps. Under
+greedy sampling both modes emit identical tokens.
 
 The engine also demonstrates the Edge-PRUNE integration: a ``ServeEngine``
 can be constructed over a *partitioned* model (an actor graph + mapping),
@@ -15,7 +21,6 @@ StagedProgram — the collaborative-inference path of the paper.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -24,48 +29,68 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.scheduler import (Completion, ContinuousScheduler, Request,
+                                     SchedulerConfig, sample_tokens,
+                                     validate_request_fits)
 
+__all__ = ["Request", "Completion", "ServeEngine", "PartitionedServeEngine"]
 
-@dataclass
-class Request:
-    id: int
-    prompt: np.ndarray                      # (S,) int32
-    max_new_tokens: int = 16
-    eos: Optional[int] = None
-    embeds: Optional[np.ndarray] = None     # VLM/audio frontend output
-
-
-@dataclass
-class Completion:
-    id: int
-    tokens: List[int]
-    prefill_s: float
-    decode_s: float
+MODES = ("static-bucket", "continuous")
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *,
                  max_len: int = 512, greedy: bool = True,
-                 temperature: float = 1.0, seed: int = 0):
+                 temperature: float = 1.0, seed: int = 0,
+                 mode: str = "static-bucket", max_slots: int = 8):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.greedy = greedy
         self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
-        self._decode = jax.jit(
-            lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache, clen))
+        self.mode = mode
+        if mode == "continuous":
+            # sampling state lives in the scheduler; keeping a second key
+            # here would be a dead config path
+            self.scheduler = ContinuousScheduler(
+                cfg, params, SchedulerConfig(
+                    max_slots=max_slots, max_len=max_len, greedy=greedy,
+                    temperature=temperature, seed=seed))
+        else:
+            self.scheduler = None
+            self.key = jax.random.PRNGKey(seed)
+            self._prefill = jax.jit(
+                lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
+            self._decode = jax.jit(
+                lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache,
+                                                          clen))
 
     def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.greedy:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+        toks, self.key = sample_tokens(self.key, logits, greedy=self.greedy,
+                                       temperature=self.temperature)
+        return toks
 
-    def generate(self, requests: List[Request]) -> List[Completion]:
+    def generate(self, requests: List[Request], *,
+                 arrivals: Optional[List[float]] = None) -> List[Completion]:
+        """Serve ``requests`` to completion. ``arrivals`` (seconds from
+        call time, continuous mode only) submits each request to the
+        admission queue at its arrival instant — an open-loop workload;
+        the static path serves everything as one closed batch."""
+        if self.mode == "continuous":
+            if arrivals is not None and len(arrivals) != len(requests):
+                raise ValueError(
+                    f"arrivals has {len(arrivals)} entries for "
+                    f"{len(requests)} requests")
+            for i, r in enumerate(requests):
+                self.scheduler.submit(r, arrivals[i] if arrivals else 0.0)
+            return self.scheduler.run()
+        if arrivals is not None:
+            raise ValueError("arrivals requires mode='continuous' — the "
+                             "static-bucket path has no admission queue")
+        for r in requests:
+            validate_request_fits(self.cfg, r, self.max_len)
         out: List[Completion] = []
         # bucket by prompt length
         buckets: Dict[int, List[Request]] = {}
@@ -127,6 +152,16 @@ class PartitionedServeEngine:
     def infer(self, tokens: np.ndarray) -> jax.Array:
         sinks = self.program.run_local({"Input": jnp.asarray(tokens)})
         return sinks["Head"]
+
+    def infer_pipelined(self, token_frames: List[np.ndarray], *,
+                        platform=None, arrivals: Optional[List[float]] = None):
+        """Serve a stream of frames through the staged pipeline: stage k
+        of frame i overlaps stage k-1 of frame i+1 on the modeled
+        per-unit clocks. Returns (logits per frame, PipelineSchedule)."""
+        frames = [{"Input": jnp.asarray(t)} for t in token_frames]
+        sinks, sched = self.program.run_pipelined(frames, platform=platform,
+                                                  arrivals=arrivals)
+        return [s["Head"] for s in sinks], sched
 
     def comm_bytes(self) -> int:
         return self.program.comm_bytes_per_iteration()

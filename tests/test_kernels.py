@@ -17,6 +17,8 @@ from repro.kernels.rglru_scan.ref import rglru_scan_seq_ref
 from repro.models.layers import decode_attention_xla, flash_attention_xla
 from repro.models.rglru import rglru_scan_ref as rglru_assoc_ref
 
+pytestmark = [pytest.mark.kernels, pytest.mark.slow]
+
 KEY = jax.random.PRNGKey(7)
 
 

@@ -9,6 +9,8 @@ from repro.core import calibration as cal
 from repro.models.cnn import (dual_input_vehicle_graph, partition_point_after,
                               ssd_mobilenet_graph, vehicle_graph)
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def vg():

@@ -16,6 +16,10 @@ import os
 import jax
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see "
+    "requirements-dev.txt); the fast lane skips them")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh
 
