@@ -80,7 +80,8 @@ def _measure(eng: ServeEngine, reqs: List[Request],
 
 
 def run(*, tiny: bool = False, n_requests: Optional[int] = None,
-        max_new: Optional[int] = None) -> List[Row]:
+        max_new: Optional[int] = None, rate: float = 200.0,
+        seed: int = 1) -> List[Row]:
     cfg = _cfg(tiny)
     n = n_requests or (8 if tiny else 16)
     new = max_new or (8 if tiny else 32)
@@ -88,7 +89,7 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
     slots = min(n, 8)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     reqs = _requests(cfg, n, new)
-    arrivals = _poisson_arrivals(n, rate_per_s=200.0, seed=1)
+    arrivals = _poisson_arrivals(n, rate_per_s=rate, seed=seed)
 
     static = ServeEngine(cfg, params, max_len=max_len)
     cont = ServeEngine(cfg, params, max_len=max_len, mode="continuous",
@@ -161,11 +162,16 @@ def main() -> None:
                     help="CI smoke config (small model, few requests)")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (requests/s) for the "
+                         "open-loop workload")
+    ap.add_argument("--seed", type=int, default=1,
+                    help="arrival-process RNG seed (reproducible sweeps)")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()
     rows = run(tiny=args.tiny, n_requests=args.requests,
-               max_new=args.max_new)
+               max_new=args.max_new, rate=args.rate, seed=args.seed)
     print(HEADER)
     emit(rows, out_path=args.out)
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.graph import Graph
 from repro.core.mapping import Mapping, PlatformGraph, PlatformModel
@@ -88,6 +88,65 @@ class Explorer:
                                         server=self.server,
                                         platform=self.platform)
                 for pp in range(1, n + 1)]
+
+    def rank_fallbacks(self, *, exclude_units: Sequence[str] = (),
+                       exclude_links: Sequence[Tuple[str, str]] = ()
+                       ) -> List[Mapping]:
+        """Ranked fallback mappings for the resilience subsystem.
+
+        Candidates are the partition-point family plus one all-on-a-single-
+        unit mapping per platform unit (the degenerate recovery mappings —
+        full endpoint inference when the server dies, raw offload when the
+        endpoint's accelerator dies). A candidate survives the filter when
+        it touches no unit in ``exclude_units`` and none of its boundary
+        edges needs a link in ``exclude_links`` (or a link the platform
+        doesn't have); survivors are ranked best-first by modeled
+        single-frame end-to-end latency — computed per mapped unit (not
+        just the endpoint/server pair), so mappings onto arbitrarily
+        named units rank correctly. Precomputing this list at deployment
+        time is the failover analogue of the Explorer's mapping-file
+        artifact set.
+        """
+        dead_u = set(exclude_units)
+        dead_l = {frozenset(p) for p in exclude_links}
+        candidates: List[Mapping] = list(self.mappings())
+        for u in self.platform.units:
+            candidates.append(Mapping(f"{self.g.name}-all-{u}",
+                                      {n: u for n in self.g.actors},
+                                      self.platform))
+        seen: set = set()
+        ranked: List[Tuple[float, Mapping]] = []
+        for m in candidates:
+            key = tuple(sorted(m.assignment.items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            if dead_u & set(m.units_used()):
+                continue
+            pairs = {frozenset((m.unit_of(f.src.actor.name),
+                                m.unit_of(f.dst.actor.name)))
+                     for f in m.boundary_edges(self.g)}
+            if any(p in dead_l or self.platform.links.get(p) is None
+                   for p in pairs):
+                continue
+            ranked.append((self._e2e_latency_s(m), m))
+        ranked.sort(key=lambda t: t[0])
+        return [m for _, m in ranked]
+
+    def _e2e_latency_s(self, m: Mapping) -> float:
+        """Modeled single-frame end-to-end latency of an arbitrary
+        mapping: every actor's compute on its assigned unit, plus every
+        boundary channel's wire time, link latency, and sender-side TX
+        CPU cost (nothing overlaps within one frame, Sec IV.D)."""
+        prog = synthesize(self.g, m)
+        t = sum(self.model.actor_time_s(m.unit_of(a.name), a)
+                for a in self.order)
+        t += sum(self.model.transfer_time_s(c.src_unit, c.dst_unit,
+                                            c.token_bytes)
+                 for c in prog.channels)
+        t += sum(self.model.tx_cpu_time_s(c.src_unit, c.token_bytes)
+                 for c in prog.channels)
+        return t
 
     def generate_artifacts(self, outdir: str) -> List[str]:
         """Write the paper's artifact set: per-partition-point mapping file

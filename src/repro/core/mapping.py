@@ -177,6 +177,25 @@ class Mapping:
                 out.append(f)
         return out
 
+    def excluding(self, dead_units, fallback_unit: str, *,
+                  name: Optional[str] = None) -> "Mapping":
+        """Re-map every actor assigned to a unit in ``dead_units`` onto
+        ``fallback_unit`` — the failover controller's last-resort recovery
+        when no precomputed fallback mapping avoids the dead set. The
+        application graph is untouched (the Edge-PRUNE invariant): only
+        the assignment changes, so the re-synthesized program computes the
+        same function on the surviving units."""
+        dead = set(dead_units)
+        if fallback_unit in dead:
+            raise ValueError(
+                f"fallback unit {fallback_unit} is itself in the dead set")
+        if self.platform is not None and fallback_unit not in self.platform.units:
+            raise ValueError(f"fallback unit {fallback_unit} not in platform")
+        assignment = {actor: (fallback_unit if unit in dead else unit)
+                      for actor, unit in self.assignment.items()}
+        return Mapping(name or f"{self.name}-sans-{'+'.join(sorted(dead))}",
+                       assignment, self.platform)
+
     @staticmethod
     def partition_point(g, pp: int, *, endpoint: str = "endpoint",
                         server: str = "server",

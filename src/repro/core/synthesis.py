@@ -184,6 +184,10 @@ class PipelineSchedule:
     makespan_s: float = 0.0
     sequential_s: float = 0.0
     unit_busy_s: Dict[str, float] = field(default_factory=dict)
+    # Per-frame ack instants: when frame i's last stage finished (the
+    # point at which the failover controller may drop its checkpoint —
+    # everything after it is replayable state, Edge-PRUNE follow-up).
+    frame_done_s: List[float] = field(default_factory=list)
 
     @property
     def speedup(self) -> float:
@@ -225,6 +229,12 @@ class StagedProgram:
         links (calibration's additive Ethernet behaviour) also block the
         sending unit for the transfer duration; overlapping links only
         delay token availability at the receiver.
+
+        Each frame has an *ack point*: the modeled instant its final stage
+        finished, recorded in ``PipelineSchedule.frame_done_s`` — the
+        timestamps the resilience subsystem compares against a failure
+        instant to decide which checkpointed frames are committed and
+        which must replay.
         """
         if arrivals is not None and len(arrivals) != len(frames):
             raise ValueError(f"arrivals has {len(arrivals)} entries for "
@@ -242,6 +252,7 @@ class StagedProgram:
             tok_ready: Dict[str, float] = {}
             sinks: Dict[str, Any] = {}
             frame_cost = 0.0
+            frame_done = 0.0
             for st in self.stages:
                 ready = arrivals[fi]
                 for c in st.rx:
@@ -267,7 +278,9 @@ class StagedProgram:
                 sched.entries.append(StageExec(fi, st.unit, start, finish))
                 sched.makespan_s = max(sched.makespan_s,
                                        *tok_ready.values(), finish)
+                frame_done = max(frame_done, finish)
             seq_clock = max(seq_clock, arrivals[fi]) + frame_cost
+            sched.frame_done_s.append(frame_done)
             sinks_per_frame.append(sinks)
         sched.sequential_s = seq_clock
         return sinks_per_frame, sched

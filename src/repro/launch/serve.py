@@ -5,10 +5,25 @@ runs a synthetic request workload; ``--partition pp`` additionally serves
 through the Edge-PRUNE partitioned actor graph at the given partition
 point, reporting the boundary traffic — the paper's collaborative-
 inference scenario with an LLM as the workload.
+
+Streaming mode: with ``--mode continuous`` the driver serves through the
+continuous-batching scheduler against the real clock — each request is
+admitted at its arrival instant and its completion is printed the moment
+it finishes. ``--trace <jsonl>`` replays a recorded request trace instead
+of the synthetic workload; one JSON object per line::
+
+    {"arrival_s": 0.00, "prompt": [17, 3, 99], "max_new": 8}
+    {"arrival_s": 0.02, "prompt_len": 32, "max_new": 16}
+
+``prompt`` gives explicit token ids; ``prompt_len`` asks for that many
+random tokens (deterministic under the driver's seed). Arrivals are
+seconds from serve start; out-of-order lines are allowed.
 """
 from __future__ import annotations
 
 import argparse
+import json
+from typing import List, Tuple
 
 import jax
 import numpy as np
@@ -18,6 +33,41 @@ from repro.core import Mapping
 from repro.models import transformer as T
 from repro.runtime.serving import (PartitionedServeEngine, Request,
                                    ServeEngine)
+
+
+def load_trace(path: str, cfg,
+               rng: np.random.RandomState) -> Tuple[List[Request], List[float]]:
+    """Parse a JSONL request trace into (requests, arrival offsets).
+    Frontend architectures (vlm/audio) get deterministic synthetic
+    ``embeds`` per request, like the synthetic workload path — traces
+    record arrival/prompt/max-new, not frontend tensors."""
+    reqs: List[Request] = []
+    arrivals: List[float] = []
+    with open(path) as fh:
+        for i, line in enumerate(fh):
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            if "prompt" in d:
+                prompt = np.asarray(d["prompt"], np.int32)
+            else:
+                prompt = rng.randint(0, cfg.vocab_size,
+                                     int(d.get("prompt_len", 32))
+                                     ).astype(np.int32)
+            r = Request(i, prompt, max_new_tokens=int(d.get("max_new", 16)),
+                        eos=d.get("eos"))
+            if cfg.arch_type == "vlm":
+                r.embeds = rng.randn(cfg.frontend_tokens,
+                                     cfg.frontend_dim).astype(np.float32)
+            elif cfg.arch_type == "audio":
+                r.embeds = rng.randn(len(prompt),
+                                     cfg.frontend_dim).astype(np.float32)
+            reqs.append(r)
+            arrivals.append(float(d.get("arrival_s", 0.0)))
+    if not reqs:
+        raise ValueError(f"trace {path} contains no requests")
+    return reqs, arrivals
 
 
 def main() -> None:
@@ -36,32 +86,64 @@ def main() -> None:
                          "continuous batching over KV slots")
     ap.add_argument("--slots", type=int, default=8,
                     help="decode batch width in continuous mode")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL request trace to replay against the real "
+                         "clock (continuous mode; see module docstring)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload RNG seed (synthetic prompts and "
+                         "prompt_len trace lines)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.RandomState(0)
-    reqs = []
-    for i in range(args.requests):
-        r = Request(i, rng.randint(0, cfg.vocab_size,
-                                   args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
-        if cfg.arch_type == "vlm":
-            r.embeds = rng.randn(cfg.frontend_tokens,
-                                 cfg.frontend_dim).astype(np.float32)
-        elif cfg.arch_type == "audio":
-            r.embeds = rng.randn(args.prompt_len,
-                                 cfg.frontend_dim).astype(np.float32)
-        reqs.append(r)
-    eng = ServeEngine(cfg, params,
-                      max_len=args.prompt_len + args.max_new + 8,
+    rng = np.random.RandomState(args.seed)
+    arrivals = None
+    if args.trace is not None:
+        if args.mode != "continuous":
+            args.mode = "continuous"
+            print("# --trace implies --mode continuous")
+        reqs, arrivals = load_trace(args.trace, cfg, rng)
+        max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 8
+    else:
+        reqs = []
+        for i in range(args.requests):
+            r = Request(i, rng.randint(0, cfg.vocab_size,
+                                       args.prompt_len).astype(np.int32),
+                        max_new_tokens=args.max_new)
+            if cfg.arch_type == "vlm":
+                r.embeds = rng.randn(cfg.frontend_tokens,
+                                     cfg.frontend_dim).astype(np.float32)
+            elif cfg.arch_type == "audio":
+                r.embeds = rng.randn(args.prompt_len,
+                                     cfg.frontend_dim).astype(np.float32)
+            reqs.append(r)
+        max_len = args.prompt_len + args.max_new + 8
+    eng = ServeEngine(cfg, params, max_len=max_len,
                       mode=args.mode, max_slots=args.slots)
-    outs = eng.generate(reqs)
-    tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
-    for o in outs[:4]:
-        print(f"req {o.id}: prefill {o.prefill_s*1e3:.1f} ms, "
-              f"{len(o.tokens)} tokens, first: {o.tokens[:8]}")
-    print(f"# aggregate decode throughput ~{tput:.1f} tok/s")
+
+    if args.mode == "continuous":
+        # Streaming serve: completions print as they finish, admission
+        # follows arrival instants on the real clock.
+        def stream(c) -> None:
+            print(f"t={c.finish_s:8.3f}s req {c.id}: ttft "
+                  f"{c.ttft_s * 1e3:7.1f} ms, latency "
+                  f"{c.latency_s * 1e3:7.1f} ms, {len(c.tokens)} tokens, "
+                  f"first: {c.tokens[:8]}")
+        outs = eng.generate(reqs, arrivals=arrivals, on_completion=stream)
+        span = max(o.finish_s for o in outs) - min(o.arrival_s for o in outs)
+        toks = sum(len(o.tokens) for o in outs)
+        lat = [o.latency_s for o in outs]
+        print(f"# served {len(outs)} requests / {toks} tokens in "
+              f"{span:.3f} s wall ({toks / max(span, 1e-9):.1f} tok/s); "
+              f"mean latency {np.mean(lat) * 1e3:.1f} ms, p95 "
+              f"{np.percentile(lat, 95) * 1e3:.1f} ms")
+    else:
+        outs = eng.generate(reqs)
+        tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
+        for o in outs[:4]:
+            print(f"req {o.id}: prefill {o.prefill_s*1e3:.1f} ms, "
+                  f"{len(o.tokens)} tokens, first: {o.tokens[:8]}")
+        print(f"# aggregate decode throughput ~{tput:.1f} tok/s")
 
     if args.partition is not None and cfg.arch_type not in ("vlm", "audio"):
         g = T.to_actor_graph(cfg, params, batch=1, seq=args.prompt_len)

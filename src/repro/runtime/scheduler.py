@@ -33,7 +33,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,10 +121,20 @@ class SchedulerConfig:
 class SchedEvent:
     """Observable admission/eviction trace (asserted on by tests)."""
     t_s: float
-    kind: str                   # "admit" | "evict"
+    kind: str                   # "admit" | "evict" | "fail"
     request_id: int
     slot: int
     step: int                   # decode-step counter at event time
+
+
+@dataclass(frozen=True)
+class SlotFailure:
+    """Injected loss of decode slots at a step boundary — the scheduler-
+    level view of a processing-unit failure (the unit hosting those KV
+    slots went away). ``slots=None`` means every active slot: whole-unit
+    loss, the companion fault-tolerance paper's server-loss scenario."""
+    step: int
+    slots: Optional[Tuple[int, ...]] = None
 
 
 @dataclass
@@ -141,10 +151,13 @@ class ContinuousScheduler:
     """Admission queue + shared decode batch over a slot-based KV cache."""
 
     def __init__(self, cfg: ModelConfig, params: Any,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None, *,
+                 failures: Optional[List[SlotFailure]] = None):
         self.cfg = cfg
         self.params = params
         self.sched = sched or SchedulerConfig()
+        # Injected slot failures, applied at decode-step boundaries.
+        self.failures = sorted(failures or [], key=lambda f: f.step)
         s = self.sched
         self.key = jax.random.PRNGKey(s.seed)
         self._prefill = jax.jit(
@@ -189,8 +202,11 @@ class ContinuousScheduler:
         validate_request_fits(self.cfg, req, self.sched.max_len)
         self.backlog.append(_Ticket(req=req, arrival_s=arrival_s))
 
-    def run(self) -> List[Completion]:
-        """Drain every submitted request; returns completions by id."""
+    def run(self, on_completion: Optional[Callable[[Completion], None]] = None
+            ) -> List[Completion]:
+        """Drain every submitted request; returns completions by id.
+        ``on_completion`` (streaming mode) is invoked with each completion
+        the moment its request finishes, before the drain returns."""
         t0 = time.perf_counter()
         out: List[Completion] = []
         self.backlog.sort(key=lambda t: t.arrival_s)
@@ -202,12 +218,45 @@ class ContinuousScheduler:
                 # idle until the next arrival (virtual clock = wall clock)
                 time.sleep(max(0.0, self.backlog[0].arrival_s - now))
                 continue
+            self._apply_failures(t0)
             self._admit(t0)
             if self.active:
-                out.extend(self._decode_step(t0))
+                done = self._decode_step(t0)
+                if on_completion is not None:
+                    for c in done:
+                        on_completion(c)
+                out.extend(done)
         return sorted(out, key=lambda c: c.id)
 
     # -- internals ----------------------------------------------------------
+
+    def _apply_failures(self, t0: float) -> None:
+        """Apply injected slot failures due at the current step boundary:
+        every request on a failed slot is *re-queued, not dropped* — its
+        KV state is gone, so it goes back to the head of the admission
+        queue (FIFO order preserved) and is re-prefilled from its original
+        prompt. Greedy decoding makes the re-run deterministic, so its
+        final tokens — and those of every unaffected request, whose slots
+        are untouched — are bit-identical to a failure-free run."""
+        while self.failures and self.failures[0].step <= self.step_count:
+            f = self.failures.pop(0)
+            slots = list(self.active) if f.slots is None \
+                else [s for s in f.slots if s in self.active]
+            now = time.perf_counter() - t0
+            victims = []
+            for slot in slots:
+                ticket = self.active.pop(slot)
+                self.free.append(slot)
+                self.cache_len[slot] = 0
+                self.events.append(SchedEvent(now, "fail", ticket.req.id,
+                                              slot, self.step_count))
+                ticket.slot = -1
+                ticket.emitted = []
+                ticket.prefill_s = 0.0
+                ticket.first_token_s = 0.0
+                victims.append(ticket)
+            victims.sort(key=lambda t: t.arrival_s)
+            self.queue.extendleft(reversed(victims))
 
     def _admit(self, t0: float) -> None:
         while self.free and self.queue:

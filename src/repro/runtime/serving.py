@@ -30,10 +30,11 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.scheduler import (Completion, ContinuousScheduler, Request,
-                                     SchedulerConfig, sample_tokens,
-                                     validate_request_fits)
+                                     SchedulerConfig, SlotFailure,
+                                     sample_tokens, validate_request_fits)
 
-__all__ = ["Request", "Completion", "ServeEngine", "PartitionedServeEngine"]
+__all__ = ["Request", "Completion", "ServeEngine", "PartitionedServeEngine",
+           "SlotFailure"]
 
 MODES = ("static-bucket", "continuous")
 
@@ -73,11 +74,14 @@ class ServeEngine:
         return toks
 
     def generate(self, requests: List[Request], *,
-                 arrivals: Optional[List[float]] = None) -> List[Completion]:
+                 arrivals: Optional[List[float]] = None,
+                 on_completion=None) -> List[Completion]:
         """Serve ``requests`` to completion. ``arrivals`` (seconds from
         call time, continuous mode only) submits each request to the
         admission queue at its arrival instant — an open-loop workload;
-        the static path serves everything as one closed batch."""
+        the static path serves everything as one closed batch.
+        ``on_completion`` (continuous only) streams each completion the
+        moment its request finishes."""
         if self.mode == "continuous":
             if arrivals is not None and len(arrivals) != len(requests):
                 raise ValueError(
@@ -85,10 +89,14 @@ class ServeEngine:
                     f"{len(requests)} requests")
             for i, r in enumerate(requests):
                 self.scheduler.submit(r, arrivals[i] if arrivals else 0.0)
-            return self.scheduler.run()
+            return self.scheduler.run(on_completion)
         if arrivals is not None:
             raise ValueError("arrivals requires mode='continuous' — the "
                              "static-bucket path has no admission queue")
+        if on_completion is not None:
+            raise ValueError("on_completion requires mode='continuous' — "
+                             "the static path completes buckets, not a "
+                             "stream")
         for r in requests:
             validate_request_fits(self.cfg, r, self.max_len)
         out: List[Completion] = []

@@ -1,0 +1,66 @@
+"""Property-based failover tests (hypothesis).
+
+The companion fault-tolerance paper's contract, stated as a property: for
+*any* partition-point mapping of a chain graph and *any* single-unit
+failure injected after frame k acked, the failover run's frames 0..k are
+bit-exactly the failure-free run's (they were committed before the
+failure and are never recomputed), and — because a single-unit fallback
+mapping always survives a single-unit failure — the whole stream is
+eventually served bit-exactly on the re-mapped program.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import synthesize
+from repro.runtime.resilience import FailureTrace
+from test_resilience import (all_on, chain_graph, partition,
+                             two_unit_platform, _controller)
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see "
+    "requirements-dev.txt); the fast lane skips them")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_failure_after_frame_k_preserves_prefix(data):
+    n_mid = data.draw(st.integers(1, 4), label="n_mid")
+    n_frames = data.draw(st.integers(3, 7), label="n_frames")
+    muls = data.draw(st.lists(st.integers(2, 99), min_size=n_mid,
+                              max_size=n_mid), label="muls")
+    g = chain_graph(n_mid, muls)
+    n_actors = len(g.actors)
+    pp = data.draw(st.integers(1, n_actors - 1), label="pp")
+    k = data.draw(st.integers(0, n_frames - 2), label="k")
+    dead = data.draw(st.sampled_from(["endpoint", "server"]), label="dead")
+    pm = two_unit_platform()
+    primary = partition(g, pp)
+    fallbacks = [all_on(g, "endpoint"), all_on(g, "server")]
+    frames = [{"Src": 7 * i + 1} for i in range(n_frames)]
+
+    nominal, nrep = _controller(g, primary, fallbacks, pm).serve(frames)
+    assert nrep.num_failovers == 0
+
+    # Fail strictly between frame k's ack and frame k+1's ack on the
+    # nominal timeline (one window => controller timeline == pipeline's).
+    done = synthesize(g, primary).run_pipelined(
+        frames, platform=pm)[1].frame_done_s
+    t_fail = (done[k] + done[k + 1]) / 2
+    assert done[k] < t_fail < done[k + 1]
+
+    ctl = _controller(g, primary, fallbacks, pm)
+    outs, rep = ctl.serve(
+        frames, failures=FailureTrace().kill_unit(dead, at=t_fail))
+    # frames 0..k acked before the failure: bit-exact and never replayed
+    for i in range(k + 1):
+        assert outs[i]["Snk"] == nominal[i]["Snk"], f"frame {i} diverged"
+        assert i not in rep.frames_replayed
+    # a viable single-unit fallback exists, so the whole stream completes
+    # bit-exactly
+    assert not rep.frames_unserved
+    for i in range(n_frames):
+        assert outs[i]["Snk"] == nominal[i]["Snk"]
+    assert rep.num_failovers == 1
+    assert dead not in ctl.mapping.units_used()

@@ -22,7 +22,8 @@ from repro.core import (Link, Mapping, PlatformGraph, PlatformModel,
                         ProcessingUnit, Simulator)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.runtime.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.runtime.scheduler import (ContinuousScheduler, SchedulerConfig,
+                                     SlotFailure)
 from repro.runtime.serving import Request, ServeEngine
 
 KEY = jax.random.PRNGKey(0)
@@ -167,6 +168,59 @@ def test_arrival_times_produce_waiting(setup):
     byid = {o.id: o for o in outs}
     assert byid[1].first_token_s >= 0.05
     assert byid[1].ttft_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# failure injection: requests on failed slots are re-queued, not dropped
+# ---------------------------------------------------------------------------
+
+def test_slot_failure_requeues_not_drops(setup):
+    """Mid-decode slot loss: affected requests go back to the head of the
+    admission queue and re-prefill; every request (affected or not) must
+    emit greedy tokens bit-identical to the failure-free run."""
+    cfg, params = setup
+    specs = [(8, 6), (12, 4), (8, 9), (5, 5), (12, 7)]
+    ref_sched = ContinuousScheduler(cfg, params,
+                                    SchedulerConfig(max_slots=2, max_len=64))
+    for r in _mixed_requests(cfg, specs):
+        ref_sched.submit(r)
+    ref = ref_sched.run()
+
+    sched = ContinuousScheduler(cfg, params,
+                                SchedulerConfig(max_slots=2, max_len=64),
+                                failures=[SlotFailure(step=3, slots=(0,))])
+    for r in _mixed_requests(cfg, specs):
+        sched.submit(r)
+    out = sched.run()
+
+    fails = [e for e in sched.events if e.kind == "fail"]
+    assert fails, "injected failure never applied"
+    assert [c.id for c in out] == [c.id for c in ref], "requests dropped"
+    for a, b in zip(ref, out):
+        assert a.tokens == b.tokens, f"request {a.id} diverged after requeue"
+    # the victim was re-admitted (two admits), budget fully served
+    victim = fails[0].request_id
+    admits = [e.request_id for e in sched.events if e.kind == "admit"]
+    assert admits.count(victim) == 2
+    assert len(out[victim].tokens) == specs[victim][1]
+
+
+def test_whole_unit_failure_requeues_every_active_request(setup):
+    """slots=None models whole-unit loss: every active request re-queues
+    in FIFO (arrival) order and the stream still completes bit-exactly."""
+    cfg, params = setup
+    specs = [(8, 5), (12, 5), (8, 5), (16, 5)]
+    ref = ServeEngine(cfg, params, max_len=64).generate(
+        _mixed_requests(cfg, specs))
+    sched = ContinuousScheduler(cfg, params,
+                                SchedulerConfig(max_slots=4, max_len=64),
+                                failures=[SlotFailure(step=1)])
+    for r in _mixed_requests(cfg, specs):
+        sched.submit(r)
+    out = sched.run()
+    fails = [e for e in sched.events if e.kind == "fail"]
+    assert len(fails) == 4
+    assert [c.tokens for c in out] == [c.tokens for c in ref]
 
 
 # ---------------------------------------------------------------------------
