@@ -13,9 +13,15 @@ open-loop serving regime). Three engine configurations are measured:
   platform, Sec III.B), reported as modeled makespan vs the sequential
   execution of the same stages.
 
+``--paged`` additionally measures the paged-KV + chunked-prefill engine
+against the slotted continuous baseline on the same Poisson trace:
+pool/high-water KV bytes vs the dense slotted reservation, and TTFT
+p50/p99 for both.
+
 ``python benchmarks/serving_bench.py --tiny --out smoke.json`` is the CI
-bench-smoke entrypoint (also runnable via ``python -m benchmarks.run
---only serving`` for the full size).
+bench-smoke entrypoint (``--paged --tiny`` is the paged smoke; also
+runnable via ``python -m benchmarks.run --only serving`` for the full
+size).
 """
 from __future__ import annotations
 
@@ -79,9 +85,44 @@ def _measure(eng: ServeEngine, reqs: List[Request],
     }
 
 
+def _paged_rows(cfg, params, reqs, arrivals, *, max_len: int, slots: int,
+                slotted_outs) -> List[Row]:
+    """Paged + chunked-prefill engine vs the slotted baseline on the same
+    Poisson trace: KV memory (pool + high-water mark vs the dense slotted
+    reservation) and TTFT p50/p99."""
+    pag = ServeEngine(cfg, params, max_len=max_len, mode="continuous",
+                      max_slots=slots, paged=True, block_size=16,
+                      prefill_chunk=16)
+    pag.generate(reqs)                  # warmup (compiles)
+    # the closed-loop warmup saturates the pool; report the high-water
+    # mark of the measured Poisson run only
+    pag.scheduler.alloc.reset_hwm()
+    o = _measure(pag, reqs, arrivals)
+    stats = pag.scheduler.kv_stats()
+    ttft_p = [x.ttft_s for x in o["outs"]]
+    ttft_s = [x.ttft_s for x in slotted_outs]
+    return [
+        Row("serving", "paged_tokens_per_s", o["throughput"], "tok/s"),
+        Row("serving", "slotted_kv_reserved_bytes",
+            stats["slotted_kv_reserved_bytes"], "B"),
+        Row("serving", "paged_kv_pool_bytes", stats["paged_kv_pool_bytes"],
+            "B"),
+        Row("serving", "paged_kv_hwm_bytes", stats["paged_kv_hwm_bytes"],
+            "B"),
+        Row("serving", "paged_poisson_ttft_p50_ms",
+            float(np.percentile(ttft_p, 50)) * 1e3, "ms"),
+        Row("serving", "paged_poisson_ttft_p99_ms",
+            float(np.percentile(ttft_p, 99)) * 1e3, "ms"),
+        Row("serving", "slotted_poisson_ttft_p50_ms",
+            float(np.percentile(ttft_s, 50)) * 1e3, "ms"),
+        Row("serving", "slotted_poisson_ttft_p99_ms",
+            float(np.percentile(ttft_s, 99)) * 1e3, "ms"),
+    ]
+
+
 def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         max_new: Optional[int] = None, rate: float = 200.0,
-        seed: int = 1) -> List[Row]:
+        seed: int = 1, paged: bool = False) -> List[Row]:
     cfg = _cfg(tiny)
     n = n_requests or (8 if tiny else 16)
     new = max_new or (8 if tiny else 32)
@@ -120,6 +161,9 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         Row("serving", "poisson_mean_ttft_ms",
             float(np.mean([x.ttft_s for x in o["outs"]])) * 1e3, "ms"),
     ]
+    if paged:
+        rows += _paged_rows(cfg, params, reqs, arrivals, max_len=max_len,
+                            slots=slots, slotted_outs=o["outs"])
 
     # continuous+pipelined: prefill stream through a 2-unit StagedProgram
     # on the paper's N2/i7 WiFi platform (overlapping link), modeled clocks.
@@ -167,11 +211,16 @@ def main() -> None:
                          "open-loop workload")
     ap.add_argument("--seed", type=int, default=1,
                     help="arrival-process RNG seed (reproducible sweeps)")
+    ap.add_argument("--paged", action="store_true",
+                    help="also measure the paged + chunked-prefill engine "
+                         "vs the slotted baseline: KV pool / high-water "
+                         "bytes and Poisson TTFT p50/p99")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()
     rows = run(tiny=args.tiny, n_requests=args.requests,
-               max_new=args.max_new, rate=args.rate, seed=args.seed)
+               max_new=args.max_new, rate=args.rate, seed=args.seed,
+               paged=args.paged)
     print(HEADER)
     emit(rows, out_path=args.out)
 

@@ -67,6 +67,109 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, nb: int,
+                         scale: float, hk: int):
+    """Block-table decode attention. Identical online-softmax body to
+    ``_decode_kernel``; the difference is entirely in the BlockSpec index
+    maps, which chase ``tables_ref`` (scalar-prefetched to SMEM) so each
+    kv step DMAs one *physical* pool block instead of the next contiguous
+    cache slice — dead blocks are never streamed."""
+    bh = pl.program_id(0)
+    ip = pl.program_id(1)
+    b = bh // hk
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    live = ip * bs < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bs, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ip * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ip == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, block_tables: jax.Array,
+                                  lengths: jax.Array, *, scale=None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); pools: (N, bs, Hk, D); block_tables: (B, nb) int32
+    physical block per logical page; lengths: (B,) valid rows. Returns
+    (B, H, D).
+
+    The kv grid dimension walks logical pages 0..nb-1; the k/v BlockSpec
+    index maps read the prefetched table to pick the physical block, so
+    the DMA stream follows the page chain. Pages at or past a sequence's
+    length are skipped via ``pl.when`` (their table entries point at the
+    null block and are never read). On TPU the pool's block_size should
+    be a multiple of the sublane tile (8 for fp32, 16 for bf16)."""
+    b, h, d = q.shape
+    n, bs, hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, hk, g, d)
+    grid = (b * hk, nb)
+    kernel = functools.partial(_paged_decode_kernel, bs=bs, nb=nb,
+                               scale=scale, hk=hk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bh, ip, tbl, lens:
+                             (bh // hk, bh % hk, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda bh, ip, tbl, lens:
+                             (tbl[bh // hk, ip], 0, bh % hk, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda bh, ip, tbl, lens:
+                             (tbl[bh // hk, ip], 0, bh % hk, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, d),
+                lambda bh, ip, tbl, lens: (bh // hk, bh % hk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, h, d)
+
+
 def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, lengths: jax.Array, *,
                             bk: int = 512, scale=None,

@@ -6,7 +6,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
 
 
 def _on_cpu() -> bool:
@@ -17,3 +18,9 @@ def _on_cpu() -> bool:
 def decode_attention(q, k_cache, v_cache, lengths, *, bk: int = 512):
     return decode_attention_pallas(q, k_cache, v_cache, lengths, bk=bk,
                                    interpret=_on_cpu())
+
+
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
+    return paged_decode_attention_pallas(q, k_pool, v_pool, block_tables,
+                                         lengths, interpret=_on_cpu())

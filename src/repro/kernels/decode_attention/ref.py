@@ -7,6 +7,21 @@ import jax
 import jax.numpy as jnp
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               scale=None):
+    """Oracle for block-table decode attention: gather each sequence's
+    pages into a contiguous view, then run the dense oracle.
+
+    q: (B, H, D); pools: (N, bs, Hk, D); block_tables: (B, nb) physical
+    block per logical page; lengths: (B,) valid rows (rows past a
+    sequence's length — including whole null/stale pages — are masked)."""
+    b, nb = block_tables.shape
+    _, bs, hk, d = k_pool.shape
+    k = k_pool[block_tables].reshape(b, nb * bs, hk, d)
+    v = v_pool[block_tables].reshape(b, nb * bs, hk, d)
+    return decode_attention_ref(q, k, v, lengths, scale=scale)
+
+
 def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
     """q: (B, H, D); caches: (B, S, Hk, D); lengths: (B,)."""
     b, h, d = q.shape

@@ -86,6 +86,19 @@ def main() -> None:
                          "continuous batching over KV slots")
     ap.add_argument("--slots", type=int, default=8,
                     help="decode batch width in continuous mode")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: global-attn K/V in a shared "
+                         "block pool with per-slot block tables "
+                         "(continuous mode)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV rows per paged block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size in blocks (0 = parity with the "
+                         "slotted cache + the reserved null block)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admit prompts this many tokens at a time, "
+                         "interleaved with decode steps (0 = one-shot "
+                         "prefill; continuous mode)")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay against the real "
                          "clock (continuous mode; see module docstring)")
@@ -118,8 +131,14 @@ def main() -> None:
                                      cfg.frontend_dim).astype(np.float32)
             reqs.append(r)
         max_len = args.prompt_len + args.max_new + 8
+    if (args.paged or args.prefill_chunk) and args.mode != "continuous":
+        args.mode = "continuous"
+        print("# --paged/--prefill-chunk imply --mode continuous")
     eng = ServeEngine(cfg, params, max_len=max_len,
-                      mode=args.mode, max_slots=args.slots)
+                      mode=args.mode, max_slots=args.slots,
+                      paged=args.paged, block_size=args.block_size,
+                      num_blocks=args.num_blocks,
+                      prefill_chunk=args.prefill_chunk)
 
     if args.mode == "continuous":
         # Streaming serve: completions print as they finish, admission
@@ -137,6 +156,13 @@ def main() -> None:
               f"{span:.3f} s wall ({toks / max(span, 1e-9):.1f} tok/s); "
               f"mean latency {np.mean(lat) * 1e3:.1f} ms, p95 "
               f"{np.percentile(lat, 95) * 1e3:.1f} ms")
+        if args.paged:
+            ks = eng.scheduler.kv_stats()
+            print(f"# paged KV: pool {ks['paged_kv_pool_bytes'] / 1e6:.2f} "
+                  f"MB, high-water {ks['paged_kv_hwm_bytes'] / 1e6:.2f} MB "
+                  f"({ks['paged_kv_hwm_blocks']:.0f} blocks) vs slotted "
+                  f"reservation "
+                  f"{ks['slotted_kv_reserved_bytes'] / 1e6:.2f} MB")
     else:
         outs = eng.generate(reqs)
         tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)

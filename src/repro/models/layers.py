@@ -418,6 +418,80 @@ def attn_decode(p, x, cfg, *, kind: str, cache, cache_len) -> Tuple[jax.Array, d
     return out, {"k": kc, "v": vc}
 
 
+def attn_extend(p, x, cfg, *, kind: str, cache, cache_len
+                ) -> Tuple[jax.Array, dict]:
+    """Chunked-prefill extension: a (B, C) token chunk attends over the
+    existing cache plus itself (causal within the chunk), and its K/V rows
+    are appended at absolute positions [cache_len, cache_len + C).
+
+    Global-attention only: the cache is position-indexed (no ring
+    wrapping), which ``supports_chunked_prefill`` guarantees. The caller
+    may pad the chunk past the real prompt — padded q rows sit at later
+    positions, so causal masking keeps every real row's attention (and
+    hence the emitted first token) independent of the padding."""
+    assert kind == "attn", "chunked prefill pages global attention only"
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    c = x.shape[1]
+    positions = cache_len[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+    q, k, v = _qkv(p, h, cfg)
+    theta = _theta_for(cfg, kind)
+    q = apply_rope(q, positions, theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, theta, cfg.rope_fraction)
+    kc = jax.vmap(lambda cc, kn, i: jax.lax.dynamic_update_slice_in_dim(
+        cc, kn, i, axis=0))(cache["k"], k, cache_len)
+    vc = jax.vmap(lambda cc, vn, i: jax.lax.dynamic_update_slice_in_dim(
+        cc, vn, i, axis=0))(cache["v"], v, cache_len)
+    o = flash_attention_xla(q, kc, vc, causal=True, q_offset=cache_len,
+                            kv_len=cache_len + c, chunk=cfg.attn_chunk)
+    out = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": kc, "v": vc}
+
+
+def paged_gather(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Materialize per-sequence contiguous KV views from a block pool.
+    pool: (N, bs, Hk, D); tables: (B, nb) physical block per logical page.
+    Returns (B, nb * bs, Hk, D) — row i of the result is the row that a
+    slotted cache would hold at position i, so downstream attention (and
+    its masking) is unchanged."""
+    b, nb = tables.shape
+    _, bs, hk, d = pool.shape
+    return pool[tables].reshape(b, nb * bs, hk, d)
+
+
+def attn_decode_paged(p, x, cfg, *, k_pool, v_pool, tables, cache_len
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a paged KV pool (global attention).
+
+    x: (B, 1, D); pools: (N, bs, Hk, hd); tables: (B, nb) with physical
+    block 0 reserved as the null block — free slots and unallocated pages
+    point there, so their (masked, never-read) writes collide harmlessly.
+    The new K/V row is scattered into block ``tables[b, cache_len // bs]``
+    at offset ``cache_len % bs`` (the scheduler allocates that block
+    before the step), then the slot's pages are streamed back — via the
+    block-table-aware Pallas kernel when ``attn_impl == "pallas"``, or an
+    XLA gather otherwise. Returns (out, new_k_pool, new_v_pool)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    positions = cache_len[:, None]
+    q, k, v = _qkv(p, h, cfg)
+    theta = _theta_for(cfg, "attn")
+    q = apply_rope(q, positions, theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, theta, cfg.rope_fraction)
+    bs = k_pool.shape[1]
+    blk = jnp.take_along_axis(tables, (cache_len // bs)[:, None], axis=1)[:, 0]
+    off = cache_len % bs
+    kp = k_pool.at[blk, off].set(k[:, 0])
+    vp = v_pool.at[blk, off].set(v[:, 0])
+    valid = cache_len + 1
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        o = da_ops.paged_decode_attention(q[:, 0], kp, vp, tables, valid)
+    else:
+        o = decode_attention_xla(q[:, 0], paged_gather(kp, tables),
+                                 paged_gather(vp, tables), valid)
+    out = x + jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return out, kp, vp
+
+
 def attn_prefill_cache(p, x, cfg, *, kind: str, positions, cache_size: int
                        ) -> Tuple[jax.Array, dict]:
     """Full-sequence prefill that also materializes the decode cache.

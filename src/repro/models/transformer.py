@@ -352,6 +352,66 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     }
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill extends a position-indexed global-attention cache
+    chunk by chunk. Ring-wrapping caches (attn_local windows,
+    max_cache_len caps), recurrent state (whose prefill starts from the
+    zero state, not a carried one), and encoder-decoder archs are served
+    by the one-shot path instead."""
+    return (all(k == "attn" for k in cfg.layer_kinds)
+            and cfg.n_encoder_layers == 0 and not cfg.max_cache_len)
+
+
+def kv_row_bytes(cfg: ModelConfig) -> int:
+    """Bytes of global-attention K+V cached per token row — the paged
+    pool's per-row footprint. Local-window and recurrent state are
+    fixed-size per slot and excluded (they are identical between the
+    paged and slotted layouts)."""
+    n_global = sum(1 for k in cfg.layer_kinds if k == "attn")
+    nbytes = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    return n_global * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * nbytes
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     max_slots: int, *, max_len: int,
+                     src_len: int = 0) -> Dict[str, Any]:
+    """Paged variant of ``init_cache``: global-attention K/V live in one
+    shared pool of ``num_blocks`` blocks of ``block_size`` rows (leaf
+    shape (N, bs, Hk, hd)) addressed through per-slot block tables,
+    instead of a dense (max_slots, max_len, ...) buffer. Physical block 0
+    is reserved as the null block. Everything that is fixed-size per
+    sequence — local-attention windows, recurrent state, cross-attention
+    K/V — stays slot-indexed exactly as in ``init_cache`` at ``max_len``,
+    so only the layout of global-attention K/V changes (and the dense
+    global buffers are never materialized)."""
+    dtype = _dtype(cfg.dtype)
+    hd, hk = cfg.resolved_head_dim, cfg.n_kv_heads
+    proto = init_cache(cfg, 1, max_len, src_len=src_len)
+
+    def widen(kind, one_slot, stacked: bool):
+        """Re-batch a batch=1 cache dict: pool layout for global-attn K/V,
+        max_slots batch for every other leaf."""
+        def leaf(path_key, a):
+            batch_axis = 1 if stacked else 0
+            if kind == "attn" and path_key in ("k", "v"):
+                shape = a.shape[:batch_axis] \
+                    + (num_blocks, block_size) + a.shape[batch_axis + 2:]
+                return jnp.zeros(shape, dtype)
+            shape = a.shape[:batch_axis] + (max_slots,) \
+                + a.shape[batch_axis + 1:]
+            return jnp.broadcast_to(
+                jnp.take(a, 0, axis=batch_axis)[
+                    (slice(None),) * batch_axis + (None,)], shape).copy()
+        return {key: leaf(key, a) for key, a in one_slot.items()}
+
+    return {
+        "scan": [widen(k, c, True) for k, c in zip(cfg.layer_pattern,
+                                                   proto["scan"])],
+        "rem": [widen(k, c, False) for k, c in zip(cfg.remainder_kinds,
+                                                   proto["rem"])],
+    }
+
+
 def _layer_prefill(p, x, kind, cfg, *, positions, cache_size, enc_out,
                    ctx=None):
     if ctx is not None:
@@ -428,10 +488,16 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 
 
 def _layer_decode(p, x, kind, cfg, *, cache, cache_len, enc_out,
-                  ctx=None):
+                  tables=None, ctx=None):
     if ctx is not None:
         p = ctx.layer(p)
-    if kind in ("attn", "attn_local"):
+    if kind == "attn" and tables is not None:
+        # paged layout: K/V in a shared block pool behind per-slot tables
+        x, kp, vp = L.attn_decode_paged(p["block"], x, cfg, k_pool=cache["k"],
+                                        v_pool=cache["v"], tables=tables,
+                                        cache_len=cache_len)
+        c = {**cache, "k": kp, "v": vp}
+    elif kind in ("attn", "attn_local"):
         x, c = L.attn_decode(p["block"], x, cfg, kind=kind, cache=cache,
                              cache_len=cache_len)
     elif kind == "rglru":
@@ -459,10 +525,15 @@ def _layer_decode(p, x, kind, cfg, *, cache, cache_len, enc_out,
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array,
-                cache: Dict[str, Any], cache_len: jax.Array, *, ctx=None
+                cache: Dict[str, Any], cache_len: jax.Array, *,
+                block_tables: Optional[jax.Array] = None, ctx=None
                 ) -> Tuple[jax.Array, Dict[str, Any], jax.Array]:
     """One serving step: next-token logits for one new token per sequence.
-    token: (B,) int32; cache_len: (B,) current context length."""
+    token: (B,) int32; cache_len: (B,) current context length.
+    ``block_tables`` (B, nb) switches global-attention layers to the paged
+    cache layout (``init_paged_cache``): they stream only the live blocks
+    the tables name, while every slot-indexed leaf (local windows,
+    recurrent state, cross K/V) behaves exactly as on the dense path."""
     params = cast_params_for_compute(params, cfg)
     x = params["embed"].astype(_dtype(cfg.dtype))[token][:, None] \
         * math.sqrt(cfg.d_model)
@@ -478,7 +549,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
                 x, c = _layer_decode(slice_params[i], x, kind, cfg,
                                      cache=slice_cache[i],
                                      cache_len=cache_len, enc_out=enc_out,
-                                     ctx=ctx)
+                                     tables=block_tables, ctx=ctx)
                 new_cs.append(c)
             return x, new_cs
         x, ncs = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
@@ -486,11 +557,104 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
     for i, kind in enumerate(cfg.remainder_kinds):
         x, c = _layer_decode(params["rem"][i], x, kind, cfg,
                              cache=cache["rem"][i], cache_len=cache_len,
-                             enc_out=enc_out, ctx=ctx)
+                             enc_out=enc_out, tables=block_tables, ctx=ctx)
         new_cache["rem"].append(c)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _head_logits(x[:, 0], params, cfg)
     return logits, new_cache, cache_len + 1
+
+
+def prefill_extend(params, cfg: ModelConfig, tokens: jax.Array,
+                   cache: Dict[str, Any], cache_len: jax.Array, *, ctx=None
+                   ) -> Tuple[jax.Array, Dict[str, Any], jax.Array]:
+    """Chunked prefill: run a (B, C) token chunk through the model against
+    an existing decode cache, appending its K/V rows at positions
+    [cache_len, cache_len + C). Compiled once per chunk shape, so a long
+    prompt is admitted as a sequence of identical extend steps interleaved
+    with decode steps instead of one monolithic prefill.
+
+    Requires ``supports_chunked_prefill(cfg)``. Returns per-position
+    logits (B, C, V) — the caller samples at the last *real* (unpadded)
+    position — plus the updated cache and cache_len + C."""
+    assert supports_chunked_prefill(cfg), cfg.name
+    params = cast_params_for_compute(params, cfg)
+    x = _embed_inputs(params, cfg, tokens, None)
+    b, c = x.shape[:2]
+    period = cfg.layer_pattern
+    new_cache: Dict[str, Any] = {"scan": [], "rem": []}
+
+    def layer(p, x, kind, lc):
+        if ctx is not None:
+            p = ctx.layer(p)
+        x, nc = L.attn_extend(p["block"], x, cfg, kind=kind, cache=lc,
+                              cache_len=cache_len)
+        if "moe" in p:
+            x, _ = M.moe_apply(p["moe"], x, cfg, ctx=ctx)
+        elif "mlp" in p:
+            x = L.mlp_apply(p["mlp"], x, cfg)
+        return x, nc
+
+    if cfg.n_periods:
+        def body(x, scanned):
+            slice_params, slice_cache = scanned
+            ncs = []
+            for i, kind in enumerate(period):
+                x, nc = layer(slice_params[i], x, kind, slice_cache[i])
+                ncs.append(nc)
+            return x, ncs
+        x, ncs = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        new_cache["scan"] = ncs
+    for i, kind in enumerate(cfg.remainder_kinds):
+        x, nc = layer(params["rem"][i], x, kind, cache["rem"][i])
+        new_cache["rem"].append(nc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _head_logits(x, params, cfg), new_cache, cache_len + c
+
+
+def paged_insert(cfg: ModelConfig, cache: Dict[str, Any],
+                 req_cache: Dict[str, Any], block_ids: jax.Array,
+                 slot: jax.Array, *, block_size: int) -> Dict[str, Any]:
+    """Write a batch=1 prefill cache into the paged cache: global-attn K/V
+    rows are scattered page-wise into the physical blocks named by
+    ``block_ids`` (one per logical page; 0 = null-block padding for pages
+    past the allocation), every other leaf is written at ``slot`` exactly
+    like the slotted insert. ``req_cache`` may be longer than the slot's
+    page span (e.g. a chunk-rounded scratch cache) — extra rows are
+    dropped; they are beyond ``max_len`` and never valid."""
+    pages = block_ids.shape[0]
+    sg = pages * block_size
+
+    def ins_pool(pool, small, stacked):
+        if stacked:  # (P, N, bs, hk, hd) <- (P, 1, S, hk, hd)
+            rows = small[:, 0, :sg]
+            blocks = rows.reshape(rows.shape[0], pages, block_size,
+                                  *rows.shape[2:])
+            return pool.at[:, block_ids].set(blocks)
+        rows = small[0, :sg]
+        blocks = rows.reshape(pages, block_size, *rows.shape[1:])
+        return pool.at[block_ids].set(blocks)
+
+    def ins_slot(big, small, stacked):
+        if stacked:
+            return big.at[:, slot].set(small[:, 0])
+        return big.at[slot].set(small[0])
+
+    def one(kind, c, r, stacked):
+        if kind != "attn":
+            return jax.tree.map(
+                lambda big, small: ins_slot(big, small, stacked), c, r)
+        out = {}
+        for key in c:
+            ins = ins_pool if key in ("k", "v") else ins_slot
+            out[key] = ins(c[key], r[key], stacked)
+        return out
+
+    return {
+        "scan": [one(k, c, r, True) for k, c, r in
+                 zip(cfg.layer_pattern, cache["scan"], req_cache["scan"])],
+        "rem": [one(k, c, r, False) for k, c, r in
+                zip(cfg.remainder_kinds, cache["rem"], req_cache["rem"])],
+    }
 
 
 # ---------------------------------------------------------------------------

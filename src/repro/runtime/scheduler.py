@@ -1,4 +1,4 @@
-"""Continuous-batching request scheduler (slot-based KV cache reuse).
+"""Continuous-batching request scheduler (slot- or page-based KV cache).
 
 The static-bucket ``ServeEngine`` path groups requests by prompt length
 and decodes each bucket to completion with its own compiled
@@ -10,20 +10,36 @@ The scheduler replaces that with the continuous-batching pattern:
 
 * one decode function compiled ONCE at a fixed slot count ``max_slots`` —
   requests join and leave the running batch without recompiling;
-* a persistent slot-based KV cache (``init_cache(cfg, max_slots,
-  max_len)``): admitting a request prefills it at batch=1 and writes the
-  resulting cache rows into a free slot; evicting just frees the slot
-  index (``cache_len`` masking makes stale rows unreachable);
+* a persistent KV cache in one of two layouts:
+
+  - **slotted** (``init_cache(cfg, max_slots, max_len)``): every slot
+    owns ``max_len`` dense KV rows. Simple, but a short request strands
+    most of its rows for its whole lifetime;
+  - **paged** (``SchedulerConfig(paged=True)``): global-attention K/V
+    live in a shared pool of fixed-size blocks
+    (``init_paged_cache``), handed out by a ``BlockAllocator`` — on
+    admission for the prompt, block-by-block during decode growth —
+    and addressed through per-slot block tables. A request holds only
+    the blocks its context actually fills; eviction/failure returns
+    them (exactly once) to the pool. When the pool is exhausted,
+    admission *waits* instead of over-committing, and decode growth
+    preempts (re-queues, never drops) the latest-admitted request.
+
 * an admission queue: requests arrive (optionally timestamped, e.g.
   Poisson arrivals in the serving bench), wait FIFO for a free slot, and
   are admitted *between* decode steps — work is re-admitted mid-flight
-  exactly as the fault-tolerant Edge-PRUNE follow-up assumes.
+  exactly as the fault-tolerant Edge-PRUNE follow-up assumes;
+* **chunked prefill** (``SchedulerConfig(prefill_chunk=C)``): admission
+  prefills a prompt in C-token ``prefill_extend`` steps interleaved with
+  decode steps, so a long prompt no longer freezes every active stream
+  for its whole prefill — the admission stall is bounded by one chunk.
 
 Per-slot ``cache_len`` is what makes the shared batch sound: the decode
 attention masks every cache row at position >= cache_len[slot], so slots
 holding different-length contexts (or nothing at all) coexist in one
 batched step. Under greedy sampling the emitted tokens are bit-identical
-to the static-bucket path (see tests/test_scheduler.py).
+to the static-bucket path — in every layout combination (see
+tests/test_scheduler.py).
 
 ``Request``/``Completion`` live here (serving.py re-exports them) so the
 engine can delegate without an import cycle.
@@ -111,17 +127,31 @@ def validate_request_fits(cfg: ModelConfig, req: Request,
 @dataclass
 class SchedulerConfig:
     max_slots: int = 8          # decode batch width (compiled once)
-    max_len: int = 512          # KV cache length per slot
+    max_len: int = 512          # KV rows per slot (rounded up to a whole
+    #                             number of blocks in paged mode)
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # paged KV cache: global-attn K/V in a shared block pool instead of
+    # dense per-slot rows. num_blocks=0 sizes the pool for slotted parity
+    # (max_slots full slots) + the reserved null block; size it smaller
+    # to actually oversubscribe.
+    paged: bool = False
+    block_size: int = 16        # KV rows per block
+    num_blocks: int = 0
+    # chunked prefill: admit prompts prefill_chunk tokens at a time,
+    # interleaved with decode steps (0 = one-shot prefill). Falls back to
+    # one-shot for configs/requests outside supports_chunked_prefill.
+    prefill_chunk: int = 0
+    # assert slot/block accounting invariants at every step boundary
+    debug: bool = False
 
 
 @dataclass
 class SchedEvent:
     """Observable admission/eviction trace (asserted on by tests)."""
     t_s: float
-    kind: str                   # "admit" | "evict" | "fail"
+    kind: str                   # "admit" | "evict" | "fail" | "preempt"
     request_id: int
     slot: int
     step: int                   # decode-step counter at event time
@@ -137,6 +167,66 @@ class SlotFailure:
     slots: Optional[Tuple[int, ...]] = None
 
 
+class BlockAllocator:
+    """Fixed pool of KV-cache blocks with leak/double-free accounting.
+
+    Physical block 0 is reserved as the null block: free slots and
+    unallocated block-table entries point at it, so their (masked,
+    never-read) decode writes land somewhere harmless. ``alloc`` returns
+    None when the request can't be satisfied — the scheduler queues or
+    preempts instead of over-committing — and ``free`` raises on a block
+    that isn't currently held, so a double-free is an error, not silent
+    pool corruption."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the reserved null "
+                             f"block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._held: set = set()
+        self.hwm = 0                    # high-water mark, blocks in use
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1      # block 0 reserved
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._held.update(blocks)
+        self.hwm = max(self.hwm, len(self._held))
+        return blocks
+
+    def reset_hwm(self) -> None:
+        """Restart high-water tracking from the current occupancy (e.g.
+        between a warmup drain and a measured run)."""
+        self.hwm = len(self._held)
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._held:
+                raise ValueError(f"block {b} freed but not held "
+                                 f"(double free or foreign block)")
+            self._held.remove(b)
+            self._free.append(b)
+
+    def check(self) -> None:
+        assert len(self._free) + len(self._held) == self.capacity, \
+            (len(self._free), len(self._held), self.capacity)
+        assert 0 not in self._held and 0 not in self._free
+
+
 @dataclass
 class _Ticket:
     req: Request
@@ -145,10 +235,24 @@ class _Ticket:
     emitted: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     first_token_s: float = 0.0
+    blocks: List[int] = field(default_factory=list)   # paged mode
+    admit_seq: int = -1         # admission order (preemption picks latest)
+
+
+@dataclass
+class _ChunkedPrefill:
+    """A prompt mid-way through chunked admission: its slot (and, paged,
+    its prompt blocks) are reserved; K/V accumulates in a batch=1 scratch
+    cache that is inserted into the shared cache once the prompt is
+    done."""
+    ticket: _Ticket
+    slot: int
+    cache: Any
+    pos: int = 0                # prompt tokens consumed so far
 
 
 class ContinuousScheduler:
-    """Admission queue + shared decode batch over a slot-based KV cache."""
+    """Admission queue + shared decode batch over a slot/paged KV cache."""
 
     def __init__(self, cfg: ModelConfig, params: Any,
                  sched: Optional[SchedulerConfig] = None, *,
@@ -156,24 +260,75 @@ class ContinuousScheduler:
         self.cfg = cfg
         self.params = params
         self.sched = sched or SchedulerConfig()
-        # Injected slot failures, applied at decode-step boundaries.
+        # Injected slot failures, applied at decode-step boundaries. A
+        # cursor (not destructive pops) tracks what has been applied, so
+        # run() is re-entrant: a second run() with new submissions still
+        # sees failures the first drain never reached.
         self.failures = sorted(failures or [], key=lambda f: f.step)
+        self._failure_pos = 0
         s = self.sched
+        if s.paged and cfg.max_cache_len:
+            raise ValueError(
+                "paged KV cache is position-indexed; max_cache_len ring "
+                "caps are a slotted-path feature")
+        if s.paged and all(k != "attn" for k in cfg.layer_kinds):
+            raise ValueError(
+                f"{cfg.name}: paged KV cache pages global-attention K/V, "
+                "but this config has none (local windows and recurrent "
+                "state are fixed-size per slot) — use the slotted layout; "
+                "its memory is already bounded")
+        # paged mode wants a whole number of blocks per slot
+        self.max_len = s.max_len if not s.paged else \
+            -(-s.max_len // s.block_size) * s.block_size
         self.key = jax.random.PRNGKey(s.seed)
-        self._prefill = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b, max_len=s.max_len))
-        self._decode = jax.jit(
-            lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache, clen))
+        max_len = self.max_len
+        self._prefill_fn = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
         self._insert = jax.jit(self._insert_impl)
-        # Persistent slot state. cache_len/tokens are host-side mirrors so
-        # admission/eviction never touches device state beyond the insert.
-        self.cache = T.init_cache(cfg, s.max_slots, s.max_len)
+        # chunked prefill (gated to configs the extend path supports)
+        self._chunk = s.prefill_chunk \
+            if (s.prefill_chunk > 0 and T.supports_chunked_prefill(cfg)) \
+            else 0
+        self._scratch_len = -(-max_len // self._chunk) * self._chunk \
+            if self._chunk else max_len
+        if self._chunk:
+            self._extend_fn = jax.jit(
+                lambda p, tok, c, cl: T.prefill_extend(p, cfg, tok, c, cl))
+            self._insert_sliced = jax.jit(self._insert_sliced_impl)
+        self._chunking: Optional[_ChunkedPrefill] = None
+        # Persistent slot state. cache_len/tokens/block_tables are host-
+        # side mirrors so admission/eviction never touches device state
+        # beyond the insert.
+        if s.paged:
+            self.pages_per_slot = max_len // s.block_size
+            num_blocks = s.num_blocks or \
+                (s.max_slots * self.pages_per_slot + 1)
+            self.alloc = BlockAllocator(num_blocks, s.block_size)
+            self.block_tables = np.zeros(
+                (s.max_slots, self.pages_per_slot), np.int32)
+            self.cache = T.init_paged_cache(cfg, num_blocks, s.block_size,
+                                            s.max_slots, max_len=max_len)
+            self._decode = jax.jit(
+                lambda p, tok, cache, clen, tbl: T.decode_step(
+                    p, cfg, tok, cache, clen, block_tables=tbl))
+            self._insert_paged = jax.jit(
+                lambda c, rc, bids, slot: T.paged_insert(
+                    cfg, c, rc, bids, slot, block_size=s.block_size))
+        else:
+            self.alloc = None
+            self.block_tables = None
+            self.cache = T.init_cache(cfg, s.max_slots, max_len)
+            self._decode = jax.jit(
+                lambda p, tok, cache, clen: T.decode_step(p, cfg, tok,
+                                                          cache, clen))
         self.cache_len = np.zeros((s.max_slots,), np.int32)
         self.tokens = np.zeros((s.max_slots,), np.int32)
         self.free: List[int] = list(range(s.max_slots))[::-1]  # pop() -> 0,1,..
         self.active: Dict[int, _Ticket] = {}
         self.queue: deque = deque()     # tickets waiting for a slot (FIFO)
         self.backlog: List[_Ticket] = []  # submitted, not yet "arrived"
+        self._backlog_pos = 0           # consumed-prefix cursor into backlog
+        self._admit_seq = 0
         self.events: List[SchedEvent] = []
         self.step_count = 0
 
@@ -190,6 +345,20 @@ class ContinuousScheduler:
                            batch_cache["rem"], req_cache["rem"])
         return {"scan": scan, "rem": rem}
 
+    def _insert_sliced_impl(self, batch_cache, req_cache, slot):
+        """Slotted insert from the chunk-rounded scratch cache: keep the
+        first max_len rows of every K/V leaf. Only reachable for chunked-
+        prefill configs (all-global-attn), where every cache leaf has the
+        row dim right after batch."""
+        ml = self.max_len
+        scan = jax.tree.map(
+            lambda big, small: big.at[:, slot].set(small[:, 0, :ml]),
+            batch_cache["scan"], req_cache["scan"])
+        rem = jax.tree.map(
+            lambda big, small: big.at[slot].set(small[0, :ml]),
+            batch_cache["rem"], req_cache["rem"])
+        return {"scan": scan, "rem": rem}
+
     def _sample(self, logits: jax.Array) -> jax.Array:
         toks, self.key = sample_tokens(self.key, logits,
                                        greedy=self.sched.greedy,
@@ -199,26 +368,45 @@ class ContinuousScheduler:
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request, arrival_s: float = 0.0) -> None:
-        validate_request_fits(self.cfg, req, self.sched.max_len)
+        validate_request_fits(self.cfg, req, self.max_len)
+        if self.sched.paged:
+            rows = max(1, len(req.prompt) + max(req.max_new_tokens - 1, 0))
+            need = -(-rows // self.sched.block_size)
+            if need > self.alloc.capacity:
+                raise ValueError(
+                    f"request {req.id}: needs {need} KV blocks worst-case, "
+                    f"pool holds {self.alloc.capacity}")
         self.backlog.append(_Ticket(req=req, arrival_s=arrival_s))
 
     def run(self, on_completion: Optional[Callable[[Completion], None]] = None
             ) -> List[Completion]:
         """Drain every submitted request; returns completions by id.
         ``on_completion`` (streaming mode) is invoked with each completion
-        the moment its request finishes, before the drain returns."""
+        the moment its request finishes, before the drain returns.
+        Re-entrant: a later run() continues from the same step counter and
+        failure cursor, serving anything submitted since."""
         t0 = time.perf_counter()
         out: List[Completion] = []
-        self.backlog.sort(key=lambda t: t.arrival_s)
-        while self.backlog or self.queue or self.active:
+        pending = sorted(self.backlog[self._backlog_pos:],
+                         key=lambda t: t.arrival_s)
+        self.backlog[self._backlog_pos:] = pending
+        while (self._backlog_pos < len(self.backlog) or self.queue
+               or self.active or self._chunking is not None):
             now = time.perf_counter() - t0
-            while self.backlog and self.backlog[0].arrival_s <= now:
-                self.queue.append(self.backlog.pop(0))
-            if not self.queue and not self.active:
-                # idle until the next arrival (virtual clock = wall clock)
-                time.sleep(max(0.0, self.backlog[0].arrival_s - now))
+            while (self._backlog_pos < len(self.backlog)
+                   and self.backlog[self._backlog_pos].arrival_s <= now):
+                self.queue.append(self.backlog[self._backlog_pos])
+                self._backlog_pos += 1
+            if not self.queue and not self.active and self._chunking is None:
+                # idle until the next arrival (virtual clock = wall
+                # clock). Failures due at this step boundary still apply
+                # — they must not be silently deferred past the gap.
+                self._apply_failures(t0)
+                time.sleep(max(
+                    0.0, self.backlog[self._backlog_pos].arrival_s - now))
                 continue
             self._apply_failures(t0)
+            self._advance_chunked(t0)
             self._admit(t0)
             if self.active:
                 done = self._decode_step(t0)
@@ -226,64 +414,235 @@ class ContinuousScheduler:
                     for c in done:
                         on_completion(c)
                 out.extend(done)
+            if self.sched.debug:
+                self._check_invariants()
         return sorted(out, key=lambda c: c.id)
 
+    def kv_stats(self) -> Dict[str, float]:
+        """KV-memory accounting for the serving bench: what a dense
+        slotted cache reserves vs what the paged pool holds / has ever
+        held (high-water mark), in bytes of global-attention K/V."""
+        row = T.kv_row_bytes(self.cfg)
+        s = self.sched
+        # the slotted baseline reserves the *configured* max_len, not the
+        # paged path's block-rounded self.max_len
+        out = {"slotted_kv_reserved_bytes":
+               float(s.max_slots * s.max_len * row)}
+        if s.paged:
+            bs = s.block_size
+            out["paged_kv_pool_bytes"] = float(self.alloc.capacity * bs * row)
+            out["paged_kv_hwm_bytes"] = float(self.alloc.hwm * bs * row)
+            out["paged_kv_hwm_blocks"] = float(self.alloc.hwm)
+        return out
+
     # -- internals ----------------------------------------------------------
+
+    def _release_slot(self, slot: int, ticket: _Ticket) -> None:
+        """Return a slot (and, paged, its blocks — exactly once) to the
+        free pool, zeroing every host-side mirror so no stale state
+        outlives the occupancy."""
+        self.free.append(slot)
+        self.cache_len[slot] = 0
+        self.tokens[slot] = 0
+        if self.sched.paged:
+            if ticket.blocks:
+                self.alloc.free(ticket.blocks)
+                ticket.blocks = []
+            self.block_tables[slot] = 0
+
+    @staticmethod
+    def _reset_ticket(ticket: _Ticket) -> None:
+        ticket.slot = -1
+        ticket.emitted = []
+        ticket.prefill_s = 0.0
+        ticket.first_token_s = 0.0
+        ticket.admit_seq = -1
 
     def _apply_failures(self, t0: float) -> None:
         """Apply injected slot failures due at the current step boundary:
         every request on a failed slot is *re-queued, not dropped* — its
-        KV state is gone, so it goes back to the head of the admission
-        queue (FIFO order preserved) and is re-prefilled from its original
-        prompt. Greedy decoding makes the re-run deterministic, so its
-        final tokens — and those of every unaffected request, whose slots
-        are untouched — are bit-identical to a failure-free run."""
-        while self.failures and self.failures[0].step <= self.step_count:
-            f = self.failures.pop(0)
+        KV state (and paged blocks) is gone, so it goes back to the head
+        of the admission queue (FIFO order preserved) and is re-prefilled
+        from its original prompt. A prompt mid-way through chunked
+        prefill on a failed slot restarts the same way. Greedy decoding
+        makes the re-run deterministic, so its final tokens — and those
+        of every unaffected request, whose slots are untouched — are
+        bit-identical to a failure-free run."""
+        while (self._failure_pos < len(self.failures)
+               and self.failures[self._failure_pos].step <= self.step_count):
+            f = self.failures[self._failure_pos]
+            self._failure_pos += 1
             slots = list(self.active) if f.slots is None \
                 else [s for s in f.slots if s in self.active]
             now = time.perf_counter() - t0
             victims = []
             for slot in slots:
                 ticket = self.active.pop(slot)
-                self.free.append(slot)
-                self.cache_len[slot] = 0
+                self._release_slot(slot, ticket)
                 self.events.append(SchedEvent(now, "fail", ticket.req.id,
                                               slot, self.step_count))
-                ticket.slot = -1
-                ticket.emitted = []
-                ticket.prefill_s = 0.0
-                ticket.first_token_s = 0.0
+                self._reset_ticket(ticket)
                 victims.append(ticket)
+            st = self._chunking
+            if st is not None and (f.slots is None or st.slot in f.slots):
+                self._chunking = None
+                self._release_slot(st.slot, st.ticket)
+                self.events.append(SchedEvent(now, "fail", st.ticket.req.id,
+                                              st.slot, self.step_count))
+                self._reset_ticket(st.ticket)
+                victims.append(st.ticket)
             victims.sort(key=lambda t: t.arrival_s)
             self.queue.extendleft(reversed(victims))
 
     def _admit(self, t0: float) -> None:
+        s = self.sched
         while self.free and self.queue:
-            ticket = self.queue.popleft()
-            slot = self.free.pop()
+            ticket = self.queue[0]
             r = ticket.req
-            batch = {"tokens": jnp.asarray(r.prompt[None])}
-            if r.embeds is not None:
-                batch["embeds"] = jnp.asarray(r.embeds[None])
-            tp = time.perf_counter()
-            logits, req_cache, clen = jax.block_until_ready(
-                self._prefill(self.params, batch))
-            self.cache = self._insert(self.cache, req_cache,
-                                      jnp.int32(slot))
-            ticket.prefill_s = time.perf_counter() - tp
-            first = int(self._sample(logits)[0])
-            ticket.emitted.append(first)
-            ticket.first_token_s = time.perf_counter() - t0
-            ticket.slot = slot
-            self.cache_len[slot] = int(clen[0])
-            self.tokens[slot] = first
-            self.active[slot] = ticket
-            self.events.append(SchedEvent(ticket.first_token_s, "admit",
-                                          r.id, slot, self.step_count))
+            chunked = self._chunk > 0 and r.embeds is None
+            if chunked and self._chunking is not None:
+                break           # one chunked prefill in flight at a time
+            if s.paged:
+                need = max(1, -(-len(r.prompt) // s.block_size))
+                blocks = self.alloc.alloc(need)
+                if blocks is None:
+                    break       # pool exhausted: wait, don't over-commit
+            self.queue.popleft()
+            slot = self.free.pop()
+            ticket.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            if s.paged:
+                ticket.blocks = blocks
+                self.block_tables[slot, :len(blocks)] = blocks
+            if chunked:
+                ticket.slot = slot
+                self._chunking = _ChunkedPrefill(
+                    ticket=ticket, slot=slot,
+                    cache=T.init_cache(self.cfg, 1, self._scratch_len))
+            else:
+                self._admit_one_shot(ticket, slot, t0)
+
+    def _admit_one_shot(self, ticket: _Ticket, slot: int, t0: float) -> None:
+        r = ticket.req
+        batch = {"tokens": jnp.asarray(r.prompt[None])}
+        if r.embeds is not None:
+            batch["embeds"] = jnp.asarray(r.embeds[None])
+        tp = time.perf_counter()
+        logits, req_cache, clen = jax.block_until_ready(
+            self._prefill_fn(self.params, batch))
+        if self.sched.paged:
+            self.cache = self._insert_paged(
+                self.cache, req_cache, jnp.asarray(self.block_tables[slot]),
+                jnp.int32(slot))
+        else:
+            self.cache = self._insert(self.cache, req_cache, jnp.int32(slot))
+        ticket.prefill_s += time.perf_counter() - tp
+        first = int(self._sample(logits)[0])
+        self._activate(ticket, slot, first, int(clen[0]), t0)
+
+    def _advance_chunked(self, t0: float) -> None:
+        """Run ONE prefill chunk of the in-flight chunked admission, so
+        prefill work interleaves with decode steps instead of stalling
+        them. On the last chunk the scratch K/V is inserted into the
+        shared cache and the request joins the decode batch."""
+        st = self._chunking
+        if st is None:
+            return
+        r = st.ticket.req
+        c = self._chunk
+        real = min(c, len(r.prompt) - st.pos)
+        chunk = np.zeros((c,), np.int32)
+        chunk[:real] = r.prompt[st.pos:st.pos + real]
+        tp = time.perf_counter()
+        logits, st.cache, _ = jax.block_until_ready(self._extend_fn(
+            self.params, jnp.asarray(chunk[None]), st.cache,
+            jnp.full((1,), st.pos, jnp.int32)))
+        st.ticket.prefill_s += time.perf_counter() - tp
+        st.pos += real
+        if st.pos < len(r.prompt):
+            return
+        if self.sched.paged:
+            self.cache = self._insert_paged(
+                self.cache, st.cache, jnp.asarray(self.block_tables[st.slot]),
+                jnp.int32(st.slot))
+        else:
+            self.cache = self._insert_sliced(self.cache, st.cache,
+                                             jnp.int32(st.slot))
+        first = int(self._sample(logits[:, real - 1])[0])
+        self._chunking = None
+        self._activate(st.ticket, st.slot, first, len(r.prompt), t0)
+
+    def _activate(self, ticket: _Ticket, slot: int, first: int, clen: int,
+                  t0: float) -> None:
+        ticket.emitted.append(first)
+        ticket.first_token_s = time.perf_counter() - t0
+        ticket.slot = slot
+        self.cache_len[slot] = clen
+        self.tokens[slot] = first
+        self.active[slot] = ticket
+        self.events.append(SchedEvent(ticket.first_token_s, "admit",
+                                      ticket.req.id, slot, self.step_count))
 
     def _finished(self, ticket: _Ticket) -> bool:
         return len(ticket.emitted) >= ticket.req.max_new_tokens
+
+    def _pick_preempt_victim(self, exclude: int) -> Optional[int]:
+        """Latest-admitted block holder other than ``exclude`` — an
+        in-flight chunked prefill counts (it holds its prompt blocks), so
+        a pool dried out by a half-prefilled prompt can still be
+        reclaimed."""
+        seq = {s: tk.admit_seq for s, tk in self.active.items()}
+        if self._chunking is not None:
+            seq[self._chunking.slot] = self._chunking.ticket.admit_seq
+        seq.pop(exclude, None)
+        if not seq:
+            return None
+        return max(seq, key=seq.get)
+
+    def _preempt(self, slot: int, t0: float) -> None:
+        """Evict-and-requeue to reclaim blocks for an older request's
+        decode growth: the victim restarts from its prompt (greedy decode
+        makes the re-run bit-identical), back at the queue head."""
+        if self._chunking is not None and self._chunking.slot == slot:
+            ticket = self._chunking.ticket
+            self._chunking = None
+        else:
+            ticket = self.active.pop(slot)
+        self._release_slot(slot, ticket)
+        now = time.perf_counter() - t0
+        self.events.append(SchedEvent(now, "preempt", ticket.req.id, slot,
+                                      self.step_count))
+        self._reset_ticket(ticket)
+        self.queue.appendleft(ticket)
+
+    def _grow_blocks(self, t0: float) -> None:
+        """Paged decode growth: before a decode step, every active slot
+        whose next KV write position falls in an unallocated page gets one
+        fresh block; admission order wins when the pool runs dry — the
+        latest-admitted other request is preempted to free blocks.
+        Guaranteed to terminate because submit() validates that any single
+        request's worst case fits the pool."""
+        if not self.sched.paged:
+            return
+        bs = self.sched.block_size
+        for slot in sorted(self.active,
+                           key=lambda s: self.active[s].admit_seq):
+            if slot not in self.active:     # preempted earlier this pass
+                continue
+            page = int(self.cache_len[slot]) // bs
+            if self.block_tables[slot, page]:
+                continue
+            blocks = self.alloc.alloc(1)
+            while blocks is None:
+                victim = self._pick_preempt_victim(exclude=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        f"paged KV pool exhausted growing slot {slot} with "
+                        f"no other active request to preempt")
+                self._preempt(victim, t0)
+                blocks = self.alloc.alloc(1)
+            self.block_tables[slot, page] = blocks[0]
+            self.active[slot].blocks.append(blocks[0])
 
     def _decode_step(self, t0: float) -> List[Completion]:
         done: List[Completion] = []
@@ -292,9 +651,15 @@ class ContinuousScheduler:
             done.append(self._evict(slot, t0))
         if not self.active:
             return done
-        logits, self.cache, _ = self._decode(
-            self.params, jnp.asarray(self.tokens), self.cache,
-            jnp.asarray(self.cache_len))
+        self._grow_blocks(t0)
+        if self.sched.paged:
+            logits, self.cache, _ = self._decode(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                jnp.asarray(self.cache_len), jnp.asarray(self.block_tables))
+        else:
+            logits, self.cache, _ = self._decode(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                jnp.asarray(self.cache_len))
         toks = np.asarray(self._sample(logits))
         self.step_count += 1
         for slot in self.active:     # free slots keep cache_len == 0
@@ -312,8 +677,7 @@ class ContinuousScheduler:
 
     def _evict(self, slot: int, t0: float) -> Completion:
         ticket = self.active.pop(slot)
-        self.free.append(slot)
-        self.cache_len[slot] = 0
+        self._release_slot(slot, ticket)
         now = time.perf_counter() - t0
         self.events.append(SchedEvent(now, "evict", ticket.req.id, slot,
                                       self.step_count))
@@ -321,3 +685,36 @@ class ContinuousScheduler:
             ticket.req.id, ticket.emitted, ticket.prefill_s,
             now - ticket.first_token_s, arrival_s=ticket.arrival_s,
             first_token_s=ticket.first_token_s, finish_s=now)
+
+    def _check_invariants(self) -> None:
+        """Step-boundary slot/block accounting (SchedulerConfig(debug=
+        True)): a free slot has no residual length/token/table state, and
+        the block pool's books balance — every held block is named by
+        exactly one table entry of exactly one live ticket."""
+        free = set(self.free)
+        occupied = set(self.active)
+        if self._chunking is not None:
+            occupied.add(self._chunking.slot)
+        assert not (free & occupied), (free, occupied)
+        for slot in range(self.sched.max_slots):
+            if slot in free:
+                assert self.cache_len[slot] == 0, f"slot {slot}: stale len"
+                assert self.tokens[slot] == 0, f"slot {slot}: stale token"
+                if self.sched.paged:
+                    assert not self.block_tables[slot].any(), \
+                        f"slot {slot}: stale block table"
+        if self.sched.paged:
+            self.alloc.check()
+            held_by_tickets: List[int] = []
+            for tk in self.active.values():
+                held_by_tickets.extend(tk.blocks)
+            if self._chunking is not None:
+                held_by_tickets.extend(self._chunking.ticket.blocks)
+            assert len(held_by_tickets) == len(set(held_by_tickets)), \
+                "block owned by two tickets"
+            assert set(held_by_tickets) == self.alloc._held, \
+                (set(held_by_tickets), self.alloc._held)
+            table_entries = self.block_tables[self.block_tables > 0]
+            assert len(table_entries) == len(set(table_entries.tolist())), \
+                "block mapped by two table entries"
+            assert set(table_entries.tolist()) == self.alloc._held

@@ -11,7 +11,10 @@ recompiles and short requests wait for the longest in their bucket.
 ContinuousScheduler``: one decode function compiled once at a fixed slot
 count, slot-based KV cache reuse, and per-step admission/eviction —
 requests join and leave the running batch between decode steps. Under
-greedy sampling both modes emit identical tokens.
+greedy sampling both modes emit identical tokens. ``paged=True`` swaps
+the dense per-slot KV rows for the block-pool layout (``block_size`` /
+``num_blocks``), and ``prefill_chunk=C`` admits prompts C tokens at a
+time interleaved with decode steps — both still token-identical.
 
 The engine also demonstrates the Edge-PRUNE integration: a ``ServeEngine``
 can be constructed over a *partitioned* model (an actor graph + mapping),
@@ -43,9 +46,14 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *,
                  max_len: int = 512, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
-                 mode: str = "static-bucket", max_slots: int = 8):
+                 mode: str = "static-bucket", max_slots: int = 8,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: int = 0, prefill_chunk: int = 0):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
+        if mode != "continuous" and (paged or prefill_chunk):
+            raise ValueError("paged KV cache / chunked prefill require "
+                             "mode='continuous'")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -58,7 +66,9 @@ class ServeEngine:
             self.scheduler = ContinuousScheduler(
                 cfg, params, SchedulerConfig(
                     max_slots=max_slots, max_len=max_len, greedy=greedy,
-                    temperature=temperature, seed=seed))
+                    temperature=temperature, seed=seed, paged=paged,
+                    block_size=block_size, num_blocks=num_blocks,
+                    prefill_chunk=prefill_chunk))
         else:
             self.scheduler = None
             self.key = jax.random.PRNGKey(seed)

@@ -1,0 +1,111 @@
+"""Property-based paged-KV accounting tests (hypothesis).
+
+The paged scheduler's contract, stated as properties:
+
+* the ``BlockAllocator`` never leaks or double-frees across ANY
+  interleaving of allocations and frees — the books (free + held ==
+  capacity, null block untouchable) balance after every operation, and
+  freeing a block twice raises instead of silently corrupting the pool;
+* a ``ContinuousScheduler`` drain over ANY workload/failure interleaving
+  (admissions, evictions, chunked prefills, ``SlotFailure`` injections,
+  growth preemptions under an oversubscribed pool) returns every block
+  exactly once: per-step invariants hold (``debug=True``), every request
+  still gets its full token budget, and the pool is whole afterwards.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.scheduler import (BlockAllocator, ContinuousScheduler,
+                                     Request, SchedulerConfig, SlotFailure)
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see "
+    "requirements-dev.txt); the fast lane skips them")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=200, deadline=None)
+@given(data=st.data())
+def test_property_allocator_books_balance(data):
+    """Random alloc/free interleavings: accounting stays exact, the null
+    block never circulates, and a double-free raises."""
+    num_blocks = data.draw(st.integers(2, 24), label="num_blocks")
+    alloc = BlockAllocator(num_blocks, block_size=4)
+    held: list = []
+    for _ in range(data.draw(st.integers(0, 40), label="n_ops")):
+        if held and data.draw(st.booleans(), label="free?"):
+            k = data.draw(st.integers(1, len(held)), label="n_free")
+            batch, held = held[:k], held[k:]
+            alloc.free(batch)
+        else:
+            n = data.draw(st.integers(0, num_blocks), label="n_alloc")
+            avail = alloc.available
+            got = alloc.alloc(n)
+            if n > avail:
+                assert got is None, "over-committed the pool"
+            else:
+                assert got is not None and len(got) == n and 0 not in got
+                held.extend(got)
+        alloc.check()
+        assert alloc.in_use == len(held)
+        assert alloc.hwm >= alloc.in_use
+    if held:
+        alloc.free(held)
+        with pytest.raises(ValueError, match="double free|not held"):
+            alloc.free(held[:1])
+
+
+CFG = ModelConfig(
+    name="tiny-props", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+    param_dtype="float32", attn_chunk=16, remat=False)
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+# few distinct prompt lengths => the one-shot prefill compiles stay cached
+PROMPT_LENS = (4, 6, 8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_property_no_block_leaks_under_any_interleaving(data):
+    """Random workloads + random SlotFailure injections over a (possibly
+    oversubscribed) paged pool, with step-boundary invariants on: every
+    request completes its budget and every block comes home."""
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16),
+                                          label="seed"))
+    n_req = data.draw(st.integers(2, 6), label="n_req")
+    max_slots = data.draw(st.integers(1, 3), label="max_slots")
+    chunk = data.draw(st.sampled_from([0, 4]), label="prefill_chunk")
+    # capacity >= one request's worst case (8 + 6 - 1 rows -> 4 blocks)
+    num_blocks = data.draw(st.integers(5, 13), label="num_blocks")
+    reqs = [Request(i, rng.randint(0, CFG.vocab_size,
+                                   PROMPT_LENS[i % len(PROMPT_LENS)]
+                                   ).astype(np.int32),
+                    max_new_tokens=int(rng.randint(1, 7)))
+            for i in range(n_req)]
+    n_fail = data.draw(st.integers(0, 3), label="n_fail")
+    failures = [SlotFailure(step=data.draw(st.integers(0, 25),
+                                           label=f"fail_step{i}"),
+                            slots=data.draw(st.sampled_from(
+                                [None, (0,), (0, 1)]), label=f"fail_slots{i}"))
+                for i in range(n_fail)]
+    sched = ContinuousScheduler(
+        CFG, PARAMS, SchedulerConfig(max_slots=max_slots, max_len=16,
+                                     paged=True, block_size=4,
+                                     num_blocks=num_blocks,
+                                     prefill_chunk=chunk, debug=True),
+        failures=failures)
+    for r in reqs:
+        sched.submit(r)
+    outs = sched.run()
+    assert [o.id for o in outs] == list(range(n_req)), "request dropped"
+    for o, r in zip(outs, reqs):
+        assert len(o.tokens) == r.max_new_tokens
+    assert sched.alloc.in_use == 0, "leaked blocks"
+    assert sched.alloc.available == sched.alloc.capacity
+    assert not sched.block_tables.any()
+    assert not sched.cache_len.any() and not sched.tokens.any()

@@ -5,6 +5,11 @@
 * KV-slot reuse correctness — the shared-slot decode batch emits exactly
   the static-bucket path's greedy tokens, across mixed prompt lengths,
   eos stops and slot churn;
+* paged KV cache + chunked prefill — every layout/admission combination
+  (paged, chunked, paged+chunked, oversubscribed pool with growth
+  preemption) stays token-identical to the static path, admission waits
+  instead of over-committing the pool, and block accounting balances
+  (freed exactly once) across evict/fail/preempt;
 * pipelined modeled clocks — per-unit start times are monotone, every
   firing respects data availability, and the pipelined makespan beats
   sequential execution of the same stages while staying >= the bottleneck
@@ -81,6 +86,176 @@ def test_continuous_respects_eos(setup):
                      max_slots=2).generate(reqs)
     assert [c.tokens for c in c2] == [s.tokens for s in s2]
     assert len(s2[0].tokens) < 12   # eos actually truncated
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache + chunked prefill
+# ---------------------------------------------------------------------------
+
+MIXED_SPECS = [(8, 6), (12, 4), (8, 9), (5, 1), (12, 7),
+               (16, 5), (7, 3), (9, 8), (8, 2), (16, 6)]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(paged=True, block_size=8),
+    dict(prefill_chunk=4),
+    dict(paged=True, block_size=8, prefill_chunk=4),
+    dict(paged=True, block_size=4, num_blocks=16),   # oversubscribed pool
+], ids=["paged", "chunked", "paged+chunked", "paged-tight"])
+def test_paged_and_chunked_match_static_tokens(setup, kw):
+    """Every cache-layout/admission combination — paged blocks, chunked
+    prefill, both, and an oversubscribed pool that forces growth
+    preemption — must emit the static-bucket path's exact greedy tokens,
+    with slot/block invariants asserted at every step boundary."""
+    cfg, params = setup
+    reqs = _mixed_requests(cfg, MIXED_SPECS)
+    static = ServeEngine(cfg, params, max_len=64).generate(reqs)
+    sched = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=4, max_len=64, debug=True,
+                                     **kw))
+    for r in reqs:
+        sched.submit(r)
+    outs = sched.run()
+    assert [c.id for c in outs] == [s.id for s in static]
+    for s, c in zip(static, outs):
+        assert c.tokens == s.tokens, f"request {s.id} diverged"
+    if kw.get("paged"):
+        # every block returned to the pool exactly once
+        assert sched.alloc.in_use == 0
+        assert sched.alloc.available == sched.alloc.capacity
+        assert not sched.block_tables.any()
+
+
+def test_paged_admission_waits_when_pool_exhausted(setup):
+    """A pool that fits ~one request's worst case at a time must
+    serialize admissions (no over-commit) and still serve everything:
+    the set of concurrently admitted requests never needs more blocks
+    than the pool holds."""
+    cfg, params = setup
+    specs = [(8, 4)] * 5                 # worst case 11 rows -> 3 blocks
+    sched = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=4, max_len=32, paged=True,
+                                     block_size=4, num_blocks=5, debug=True))
+    for r in _mixed_requests(cfg, specs):
+        sched.submit(r)
+    outs = sched.run()
+    assert [len(o.tokens) for o in outs] == [m for _, m in specs]
+    live = set()
+    peak = 0
+    for e in sched.events:
+        if e.kind == "admit":
+            live.add(e.request_id)
+        elif e.kind in ("evict", "fail", "preempt"):
+            live.discard(e.request_id)
+        peak = max(peak, len(live))
+    assert peak <= 2, f"over-committed pool: {peak} concurrent requests"
+    assert sched.alloc.in_use == 0
+
+
+def test_growth_can_preempt_inflight_chunked_prefill(setup):
+    """A pool dried out partly by a half-prefilled prompt's blocks must
+    still let an older request's decode growth make progress: the
+    in-flight chunked prefill is a preemption candidate like any active
+    slot, not an invisible block holder that crashes run()."""
+    cfg, params = setup
+    # capacity 7 blocks of 2 rows. Request 0 (2-row prompt, 12 new
+    # tokens, worst case 7 blocks) is decoding and growing a block every
+    # 2 steps while request 1's 10-row prompt (5 blocks, admitted
+    # upfront) spends 5 iterations in 2-token prefill chunks — the pool
+    # runs dry at request 0's second growth, mid-prefill.
+    sched = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=2, max_len=14, paged=True,
+                                     block_size=2, num_blocks=8,
+                                     prefill_chunk=2, debug=True))
+    rng = np.random.RandomState(0)
+    sched.submit(Request(0, rng.randint(0, cfg.vocab_size, 2)
+                         .astype(np.int32), max_new_tokens=12))
+    sched.submit(Request(1, rng.randint(0, cfg.vocab_size, 10)
+                         .astype(np.int32), max_new_tokens=2))
+    outs = sched.run()
+    assert [len(o.tokens) for o in outs] == [12, 2]
+    preempted = [e for e in sched.events if e.kind == "preempt"]
+    assert preempted and preempted[0].request_id == 1
+    assert sched.alloc.in_use == 0
+
+
+def test_paged_rejects_configs_with_no_global_attention(setup):
+    """Subquadratic configs are exempt from the max_len rows bound, so
+    paged growth could index past the block table; they also have no
+    global-attn K/V to page. The combination is rejected up front."""
+    cfg, params = setup
+    import dataclasses
+    local = dataclasses.replace(cfg, layer_pattern=("attn_local",), window=8)
+    with pytest.raises(ValueError, match="paged KV cache pages"):
+        ContinuousScheduler(local, params,
+                            SchedulerConfig(max_slots=2, paged=True))
+
+
+def test_chunked_prefill_matches_one_shot(setup):
+    """Chunked admission is a pure scheduling change: the same workload
+    prefilled 4 tokens at a time must emit the one-shot path's exact
+    greedy tokens (and actually run chunked: prompts longer than one
+    chunk, interleaved with live decodes)."""
+    cfg, params = setup
+    one_shot = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=3, max_len=64))
+    chunked = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=3, max_len=64,
+                                     prefill_chunk=4, debug=True))
+    for sched in (one_shot, chunked):
+        for r in _mixed_requests(cfg, MIXED_SPECS):
+            sched.submit(r)
+    a, b = one_shot.run(), chunked.run()
+    assert [c.tokens for c in a] == [c.tokens for c in b]
+
+
+def test_evicted_slot_state_is_zeroed(setup):
+    """No stale host-side mirrors after a drain: cache_len, last-token
+    and block-table rows of freed slots are all zero (the invariant that
+    used to rot silently when only cache_len was reset)."""
+    cfg, params = setup
+    sched = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=2, max_len=64, paged=True,
+                                     block_size=8, debug=True),
+        failures=[SlotFailure(step=2, slots=(1,))])
+    for r in _mixed_requests(cfg, MIXED_SPECS[:5]):
+        sched.submit(r)
+    sched.run()
+    assert not sched.cache_len.any()
+    assert not sched.tokens.any()
+    assert not sched.block_tables.any()
+    assert sched.alloc.in_use == 0
+
+
+def test_run_is_reentrant_and_keeps_pending_failures(setup):
+    """A failure scheduled past the first drain's final step must fire in
+    a later run() — the injected list is tracked with a cursor, not
+    consumed destructively — and both drains stay bit-identical to the
+    static path."""
+    cfg, params = setup
+    specs_a, specs_b = MIXED_SPECS[:3], MIXED_SPECS[3:6]
+    static = ServeEngine(cfg, params, max_len=64).generate(
+        _mixed_requests(cfg, specs_a + specs_b))
+    sched = ContinuousScheduler(
+        cfg, params, SchedulerConfig(max_slots=4, max_len=64, debug=True),
+        failures=[SlotFailure(step=10 ** 6),    # never due: must survive
+                  SlotFailure(step=12, slots=(0,))])
+    reqs = _mixed_requests(cfg, specs_a + specs_b)
+    for r in reqs[:3]:
+        sched.submit(r)
+    first = sched.run()
+    steps_after_first = sched.step_count
+    for r in reqs[3:]:
+        sched.submit(r)
+    second = sched.run()
+    outs = sorted(first + second, key=lambda c: c.id)
+    assert [c.tokens for c in outs] == [s.tokens for s in static]
+    # the step-12 failure was consumed by whichever drain reached step 12
+    # (the second, unless the first ran long), and the far-future one is
+    # still pending — not dropped with the first drain's state
+    assert steps_after_first < sched.step_count >= 12
+    assert sched._failure_pos == 1
+    assert sched.failures[sched._failure_pos].step == 10 ** 6
 
 
 # ---------------------------------------------------------------------------
