@@ -13,7 +13,7 @@ of frame i+1 (Sec III.B).
 
 Run: PYTHONPATH=src python examples/distributed_serving.py
 """
-import time
+import warnings
 
 import jax
 import numpy as np
@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import Mapping, PlatformModel, paper_platform
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.serving import (PartitionedServeEngine, Request,
                                    ServeEngine)
 
@@ -33,17 +34,25 @@ params = T.init_params(cfg, jax.random.PRNGKey(0))
 print(f"model: {cfg.name}, ~{cfg.param_count()/1e6:.1f}M params")
 
 # --- batched monolithic serving: static buckets vs continuous --------------
+# The legacy ServeEngine kwarg API still works through the deprecation
+# shim (this script doubles as the API-stability smoke in CI), and must
+# emit the exact tokens of the policy-based Engine it now wraps.
 rng = np.random.RandomState(0)
 reqs = [Request(i, rng.randint(0, cfg.vocab_size,
                                (32, 48)[i % 2]).astype(np.int32),
                 max_new_tokens=24) for i in range(8)]
-eng = ServeEngine(cfg, params, max_len=96)
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    eng = ServeEngine(cfg, params, max_len=96)        # deprecated spelling
+assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
+    "the ServeEngine shim must warn"
 outs = eng.generate(reqs)
 tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
-print(f"static-bucket: served {len(outs)} requests, ~{tput:.1f} tok/s")
-print(f"req 0 continuation: {outs[0].tokens}")
+print(f"static-bucket (legacy shim): served {len(outs)} requests, "
+      f"~{tput:.1f} tok/s")
+print(f"req 0 continuation: {outs[0].tokens} ({outs[0].finish_reason})")
 
-cont = ServeEngine(cfg, params, max_len=96, mode="continuous", max_slots=4)
+cont = Engine(cfg, params, EngineConfig(max_len=96, max_slots=4))
 arrivals = list(np.cumsum(np.full(len(reqs), 0.01)))   # 100 req/s stream
 couts = cont.generate(reqs, arrivals=arrivals)
 assert [c.tokens for c in couts] == [o.tokens for o in outs], \
@@ -51,6 +60,23 @@ assert [c.tokens for c in couts] == [o.tokens for o in outs], \
 print(f"continuous:    same tokens over 4 slots; mean ttft "
       f"{np.mean([c.ttft_s for c in couts])*1e3:.1f} ms, "
       f"{len(cont.scheduler.events)} admission-queue events")
+
+# request lifecycle: priority admission, per-token streaming, cancel
+life = Engine(cfg, params, EngineConfig(max_len=96, max_slots=1,
+                                        admission="priority"))
+bg = life.submit(Request(100, reqs[0].prompt, max_new_tokens=24))
+hi = life.submit(Request(101, reqs[1].prompt, max_new_tokens=24,
+                         priority=5))
+first_hi = next(hi.stream())           # pull-based: drives the engine
+bg.cancel()                            # background work no longer needed
+life.run()
+assert hi.tokens[:1] == [first_hi] and hi.finish_reason == "length"
+assert bg.finish_reason == "cancelled"
+admit_order = [e.request_id for e in life.scheduler.events
+               if e.kind == "admit"]
+print(f"lifecycle:     priority admit order {admit_order}, streamed "
+      f"first token {first_hi}, cancelled req 100 after "
+      f"{len(bg.tokens)} tokens")
 
 # --- Edge-PRUNE partitioned inference --------------------------------------
 g = T.to_actor_graph(cfg, params, batch=1, seq=48, group_size=2)

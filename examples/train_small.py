@@ -17,7 +17,8 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime import checkpoint, data, optim
-from repro.runtime.serving import Request, ServeEngine
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.serving import Request
 from repro.runtime.trainstep import make_train_step
 
 
@@ -64,7 +65,8 @@ def main() -> None:
     restored = checkpoint.restore(path, jax.eval_shape(lambda: params))
     print(f"checkpoint round-trip ok -> {path}")
 
-    eng = ServeEngine(cfg, restored, max_len=args.seq + 16)
+    eng = Engine(cfg, restored, EngineConfig(max_len=args.seq + 16,
+                                             admission="batch"))
     prompt = next(data.lm_batches(1, 16, cfg.vocab_size, seed=9))["tokens"][0]
     out = eng.generate([Request(0, prompt, max_new_tokens=12)])[0]
     print(f"sampled continuation of trained model: {out.tokens}")

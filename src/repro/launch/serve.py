@@ -1,22 +1,29 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the batched ServeEngine over a (smoke-sized on CPU) model and
-runs a synthetic request workload; ``--partition pp`` additionally serves
-through the Edge-PRUNE partitioned actor graph at the given partition
-point, reporting the boundary traffic — the paper's collaborative-
-inference scenario with an LLM as the workload.
+Spins up the policy-based ``Engine`` over a (smoke-sized on CPU) model
+and runs a synthetic request workload; ``--partition pp`` additionally
+serves through the Edge-PRUNE partitioned actor graph at the given
+partition point, reporting the boundary traffic — the paper's
+collaborative-inference scenario with an LLM as the workload.
 
-Streaming mode: with ``--mode continuous`` the driver serves through the
-continuous-batching scheduler against the real clock — each request is
-admitted at its arrival instant and its completion is printed the moment
-it finishes. ``--trace <jsonl>`` replays a recorded request trace instead
-of the synthetic workload; one JSON object per line::
+``--policy`` picks the admission policy: ``batch`` is the seed
+static-bucket executor (closed batches, no arrivals); ``fifo`` /
+``priority`` / ``edf`` stream through the continuous scheduler against
+the real clock — each request is admitted at its arrival instant and
+its completion is printed the moment it finishes. The legacy ``--mode
+static-bucket|continuous`` spelling still works and maps onto
+``--policy batch|fifo``.
+
+``--trace <jsonl>`` replays a recorded request trace instead of the
+synthetic workload; one JSON object per line::
 
     {"arrival_s": 0.00, "prompt": [17, 3, 99], "max_new": 8}
-    {"arrival_s": 0.02, "prompt_len": 32, "max_new": 16}
+    {"arrival_s": 0.02, "prompt_len": 32, "max_new": 16, "priority": 2,
+     "deadline_s": 0.5}
 
 ``prompt`` gives explicit token ids; ``prompt_len`` asks for that many
-random tokens (deterministic under the driver's seed). Arrivals are
+random tokens (deterministic under the driver's seed). ``priority`` and
+``deadline_s`` feed the priority/EDF admission policies. Arrivals are
 seconds from serve start; out-of-order lines are allowed.
 """
 from __future__ import annotations
@@ -31,8 +38,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import Mapping
 from repro.models import transformer as T
-from repro.runtime.serving import (PartitionedServeEngine, Request,
-                                   ServeEngine)
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.serving import PartitionedServeEngine, Request
 
 
 def load_trace(path: str, cfg,
@@ -40,7 +47,8 @@ def load_trace(path: str, cfg,
     """Parse a JSONL request trace into (requests, arrival offsets).
     Frontend architectures (vlm/audio) get deterministic synthetic
     ``embeds`` per request, like the synthetic workload path — traces
-    record arrival/prompt/max-new, not frontend tensors."""
+    record arrival/prompt/max-new (+ scheduling fields), not frontend
+    tensors."""
     reqs: List[Request] = []
     arrivals: List[float] = []
     with open(path) as fh:
@@ -56,7 +64,9 @@ def load_trace(path: str, cfg,
                                      int(d.get("prompt_len", 32))
                                      ).astype(np.int32)
             r = Request(i, prompt, max_new_tokens=int(d.get("max_new", 16)),
-                        eos=d.get("eos"))
+                        eos=d.get("eos"),
+                        priority=int(d.get("priority", 0)),
+                        deadline_s=d.get("deadline_s"))
             if cfg.arch_type == "vlm":
                 r.embeds = rng.randn(cfg.frontend_tokens,
                                      cfg.frontend_dim).astype(np.float32)
@@ -80,41 +90,59 @@ def main() -> None:
     ap.add_argument("--partition", type=int, default=None,
                     help="also run Edge-PRUNE partitioned inference with "
                          "this many actors on the 'endpoint' unit")
-    ap.add_argument("--mode", default="static-bucket",
+    ap.add_argument("--policy", default=None,
+                    choices=("batch", "fifo", "priority", "edf"),
+                    help="admission policy: 'batch' = static buckets "
+                         "(closed batch, the seed path); fifo/priority/edf "
+                         "stream through the continuous scheduler")
+    ap.add_argument("--mode", default=None,
                     choices=("static-bucket", "continuous"),
-                    help="request scheduler: static same-length buckets or "
-                         "continuous batching over KV slots")
+                    help="legacy spelling of --policy: static-bucket=batch, "
+                         "continuous=fifo")
+    ap.add_argument("--preemption", default="evict-latest",
+                    choices=("evict-latest", "lowest-priority"),
+                    help="paged-pool preemption victim policy")
     ap.add_argument("--slots", type=int, default=8,
-                    help="decode batch width in continuous mode")
+                    help="decode batch width (continuous policies)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: global-attn K/V in a shared "
-                         "block pool with per-slot block tables "
-                         "(continuous mode)")
+                         "block pool with per-slot block tables")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV rows per paged block")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size in blocks (0 = parity with the "
                          "slotted cache + the reserved null block)")
+    ap.add_argument("--watermark", type=int, default=0,
+                    help="paged admission watermark: keep this many blocks "
+                         "free beyond the prompt's need when admitting "
+                         "(growth headroom; damps preemption thrash)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="admit prompts this many tokens at a time, "
                          "interleaved with decode steps (0 = one-shot "
-                         "prefill; continuous mode)")
+                         "prefill)")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay against the real "
-                         "clock (continuous mode; see module docstring)")
+                         "clock (continuous policies; see module docstring)")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload RNG seed (synthetic prompts and "
                          "prompt_len trace lines)")
     args = ap.parse_args()
+
+    policy = args.policy
+    if policy is None and args.mode is not None:
+        policy = "batch" if args.mode == "static-bucket" else "fifo"
+    if policy is None:
+        policy = "batch"
+    if policy == "batch" and (args.paged or args.prefill_chunk or args.trace):
+        policy = "fifo"
+        print("# --paged/--prefill-chunk/--trace imply a continuous "
+              "admission policy (fifo)")
 
     cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.RandomState(args.seed)
     arrivals = None
     if args.trace is not None:
-        if args.mode != "continuous":
-            args.mode = "continuous"
-            print("# --trace implies --mode continuous")
         reqs, arrivals = load_trace(args.trace, cfg, rng)
         max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 8
     else:
@@ -131,44 +159,46 @@ def main() -> None:
                                      cfg.frontend_dim).astype(np.float32)
             reqs.append(r)
         max_len = args.prompt_len + args.max_new + 8
-    if (args.paged or args.prefill_chunk) and args.mode != "continuous":
-        args.mode = "continuous"
-        print("# --paged/--prefill-chunk imply --mode continuous")
-    eng = ServeEngine(cfg, params, max_len=max_len,
-                      mode=args.mode, max_slots=args.slots,
-                      paged=args.paged, block_size=args.block_size,
-                      num_blocks=args.num_blocks,
-                      prefill_chunk=args.prefill_chunk)
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=max_len, max_slots=args.slots,
+        kv_layout="paged" if args.paged else "slotted",
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        watermark=args.watermark, prefill_chunk=args.prefill_chunk,
+        admission=policy, preemption=args.preemption))
 
-    if args.mode == "continuous":
+    if policy != "batch":
         # Streaming serve: completions print as they finish, admission
         # follows arrival instants on the real clock.
         def stream(c) -> None:
             print(f"t={c.finish_s:8.3f}s req {c.id}: ttft "
                   f"{c.ttft_s * 1e3:7.1f} ms, latency "
                   f"{c.latency_s * 1e3:7.1f} ms, {len(c.tokens)} tokens, "
-                  f"first: {c.tokens[:8]}")
+                  f"{c.finish_reason}, first: {c.tokens[:8]}")
         outs = eng.generate(reqs, arrivals=arrivals, on_completion=stream)
         span = max(o.finish_s for o in outs) - min(o.arrival_s for o in outs)
         toks = sum(len(o.tokens) for o in outs)
         lat = [o.latency_s for o in outs]
+        st = eng.stats()
         print(f"# served {len(outs)} requests / {toks} tokens in "
               f"{span:.3f} s wall ({toks / max(span, 1e-9):.1f} tok/s); "
               f"mean latency {np.mean(lat) * 1e3:.1f} ms, p95 "
-              f"{np.percentile(lat, 95) * 1e3:.1f} ms")
+              f"{np.percentile(lat, 95) * 1e3:.1f} ms; "
+              f"{st['preemptions']} preemptions, "
+              f"{st['slot_failures']} slot failures")
         if args.paged:
-            ks = eng.scheduler.kv_stats()
+            ks = eng.kv_stats()
             print(f"# paged KV: pool {ks['paged_kv_pool_bytes'] / 1e6:.2f} "
                   f"MB, high-water {ks['paged_kv_hwm_bytes'] / 1e6:.2f} MB "
-                  f"({ks['paged_kv_hwm_blocks']:.0f} blocks) vs slotted "
-                  f"reservation "
+                  f"({ks['paged_kv_hwm_blocks']:.0f} blocks, watermark "
+                  f"{args.watermark}) vs slotted reservation "
                   f"{ks['slotted_kv_reserved_bytes'] / 1e6:.2f} MB")
     else:
         outs = eng.generate(reqs)
         tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
         for o in outs[:4]:
             print(f"req {o.id}: prefill {o.prefill_s*1e3:.1f} ms, "
-                  f"{len(o.tokens)} tokens, first: {o.tokens[:8]}")
+                  f"{len(o.tokens)} tokens, {o.finish_reason}, "
+                  f"first: {o.tokens[:8]}")
         print(f"# aggregate decode throughput ~{tput:.1f} tok/s")
 
     if args.partition is not None and cfg.arch_type not in ("vlm", "audio"):

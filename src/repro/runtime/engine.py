@@ -1,0 +1,378 @@
+"""Unified serving facade: one ``Engine``, policy-configured.
+
+Every serving configuration — the seed static-bucket path, continuous
+batching over dense KV slots, the paged block-pool cache, chunked
+prefill, priority / deadline scheduling — is the same ``Engine`` class
+under a different ``EngineConfig``. The config names *policies*
+(``runtime.policies``) instead of modes:
+
+* ``admission`` — who is served next: ``"fifo"`` | ``"priority"`` |
+  ``"edf"`` (earliest deadline first) run through the continuous
+  scheduler; ``"batch"`` is the seed static-bucket executor (closed
+  batches grouped by prompt length, one compile per bucket);
+* ``kv_layout`` — ``"slotted"`` (dense per-slot rows) | ``"paged"``
+  (shared block pool, admission ``watermark``, growth preemption);
+* ``preemption`` — who loses their blocks under pool pressure:
+  ``"evict-latest"`` | ``"lowest-priority"``;
+* the ``Sampler`` owns the PRNG state (greedy / temperature / seed).
+
+Under greedy sampling every configuration emits identical tokens — the
+policies move *waiting time*, never content — so the whole matrix is
+checked against the static path in tests.
+
+``submit()`` returns a ``RequestHandle``: the full request lifecycle —
+``cancel()``, a per-token callback (``on_token``), a pull-based token
+iterator (``stream()``), and the final ``Completion`` with its
+``finish_reason`` (``"eos" | "length" | "cancelled" | "failed"``).
+
+The legacy ``ServeEngine(mode=..., paged=...)`` kwarg surface lives on
+as a deprecation shim in ``runtime.serving``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.policies import (BatchAdmission, Sampler, make_admission,
+                                    make_preemption)
+from repro.runtime.scheduler import (Completion, ContinuousScheduler, Request,
+                                     SchedulerConfig, SlotFailure,
+                                     validate_request_fits)
+
+__all__ = ["Engine", "EngineConfig", "RequestHandle"]
+
+KV_LAYOUTS = ("slotted", "paged")
+
+
+@dataclass
+class EngineConfig:
+    """Structured engine configuration. Field-by-field replacement for
+    the legacy ``ServeEngine`` kwarg soup (see README migration table):
+    ``mode="static-bucket"`` is ``admission="batch"``, ``paged=True`` is
+    ``kv_layout="paged"``; everything else keeps its name."""
+
+    max_slots: int = 8          # decode batch width (continuous policies)
+    max_len: int = 512          # KV rows per slot
+    # cache shape: "slotted" dense rows | "paged" shared block pool
+    kv_layout: str = "slotted"
+    block_size: int = 16        # KV rows per paged block
+    num_blocks: int = 0         # 0 = slotted parity + reserved null block
+    # paged admission watermark: keep this many blocks free beyond the
+    # prompt's need when admitting, as growth headroom for running
+    # requests (damps growth-preemption thrash under oversubscription)
+    watermark: int = 0
+    prefill_chunk: int = 0      # chunked prefill (0 = one-shot)
+    # policies: names resolved via runtime.policies, or instances
+    admission: Any = "fifo"     # "fifo" | "priority" | "edf" | "batch"
+    preemption: Any = "evict-latest"    # | "lowest-priority"
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+    debug: bool = False         # step-boundary invariant asserts
+
+
+class RequestHandle:
+    """The caller's end of one submitted request.
+
+    * ``tokens`` — every token streamed so far. Under greedy sampling a
+      failure re-queue re-decodes the identical prefix and the handle
+      dedups by index, so the stream is a stable prefix of the final
+      ``Completion.tokens``; under stochastic sampling a re-queue
+      *restarts* the stream (the PRNG advanced, the prefix can't replay
+      bit-identically), so streaming consumers there should prefer
+      ``result().tokens``;
+    * ``on_token(cb)`` — per-token callback, fired the moment a token is
+      emitted, before the engine moves on;
+    * ``stream()`` — pull iterator: yields tokens as they are produced,
+      driving ``Engine.step()`` under the hood while the request lives;
+    * ``cancel()`` — after it returns, not one more token is emitted;
+      the request completes with ``finish_reason="cancelled"`` (queued
+      requests complete immediately with no tokens);
+    * ``result()`` — drive the engine until this request finishes and
+      return its ``Completion``.
+    """
+
+    def __init__(self, engine: "Engine", request: Request):
+        self.request = request
+        self.tokens: List[int] = []
+        self.completion: Optional[Completion] = None
+        self._engine = engine
+        self._callbacks: List[Callable[[int], None]] = []
+        self._cancelled = False
+        self._ticket = None         # continuous path only
+
+    @property
+    def done(self) -> bool:
+        return self.completion is not None
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.completion.finish_reason if self.completion else None
+
+    def cancel(self) -> None:
+        """Flag the request for cancellation. Safe to call from inside a
+        token callback (the flag is checked before every emission) and
+        idempotent; a no-op once the request has completed."""
+        if self.completion is not None:
+            return
+        self._cancelled = True
+        if self._ticket is not None:
+            self._engine.scheduler.request_cancel(self._ticket)
+
+    def on_token(self, cb: Callable[[int], None]) -> Callable[[int], None]:
+        """Register a per-token callback; returns it (decorator-friendly)."""
+        self._callbacks.append(cb)
+        return cb
+
+    def stream(self) -> Iterator[int]:
+        """Yield tokens as the engine produces them. Single-threaded
+        pull: exhausting the iterator advances the engine step by step
+        (serving every other in-flight request along the way) until this
+        request finishes. Batch admission runs whole buckets per step, so
+        there the iterator yields each bucket's tokens in bursts."""
+        i = 0
+        while True:
+            while i < len(self.tokens):
+                yield self.tokens[i]
+                i += 1
+            if self.completion is not None:
+                return
+            self._engine.step()
+
+    def result(self) -> Completion:
+        """Drive the engine until this request completes."""
+        while self.completion is None:
+            self._engine.step()
+        return self.completion
+
+    # -- engine-side hooks --------------------------------------------------
+
+    def _emit(self, index: int, tok: int) -> None:
+        if index < len(self.tokens):
+            return              # failure-requeue replay of a streamed prefix
+        self.tokens.append(tok)
+        for cb in self._callbacks:
+            cb(tok)
+
+    def _restart(self) -> None:
+        """Failure re-queue under stochastic sampling: the re-decode
+        resamples, so the streamed prefix is void — token callbacks fire
+        again from index 0 for the new attempt."""
+        self.tokens = []
+
+    def _complete(self, c: Completion) -> None:
+        self.completion = c
+
+
+class Engine:
+    """Policy-based serving engine over one model + parameter set.
+
+    ``submit()`` / ``step()`` / ``run()`` is the lifecycle API;
+    ``generate()`` is the batch convenience wrapper (submit everything,
+    drain, return completions sorted by id). With a continuous admission
+    policy requests flow through the ``ContinuousScheduler``; with
+    ``admission="batch"`` the engine runs the seed static-bucket
+    executor — same facade, same handles, same ``finish_reason``."""
+
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 config: Optional[EngineConfig] = None, *,
+                 failures: Optional[List[SlotFailure]] = None):
+        self.cfg = cfg
+        self.params = params
+        self.config = c = config or EngineConfig()
+        if c.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout {c.kv_layout!r} not in {KV_LAYOUTS}")
+        self.admission = make_admission(c.admission)
+        self.preemption = make_preemption(c.preemption)
+        self.batch_mode = isinstance(self.admission, BatchAdmission)
+        self.max_len = c.max_len
+        if self.batch_mode:
+            if c.kv_layout != "slotted" or c.prefill_chunk:
+                raise ValueError(
+                    "batch admission runs the static-bucket executor; the "
+                    "paged KV layout / chunked prefill need a continuous "
+                    "admission policy (fifo | priority | edf)")
+            if failures:
+                raise ValueError(
+                    "SlotFailure injection needs the continuous scheduler "
+                    "(the static-bucket executor has no decode slots)")
+            self.scheduler = None
+            self.sampler = Sampler(greedy=c.greedy, temperature=c.temperature,
+                                   seed=c.seed)
+            max_len = c.max_len
+            self._prefill = jax.jit(
+                lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
+            self._decode = jax.jit(
+                lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache,
+                                                          clen))
+            self._pending: List[RequestHandle] = []
+        else:
+            self.scheduler = ContinuousScheduler(
+                cfg, params, SchedulerConfig(
+                    max_slots=c.max_slots, max_len=c.max_len, greedy=c.greedy,
+                    temperature=c.temperature, seed=c.seed,
+                    paged=c.kv_layout == "paged", block_size=c.block_size,
+                    num_blocks=c.num_blocks, watermark=c.watermark,
+                    prefill_chunk=c.prefill_chunk, debug=c.debug),
+                failures=failures, admission=self.admission,
+                preemption=self.preemption)
+            self.sampler = self.scheduler.sampler
+
+    # -- lifecycle API ------------------------------------------------------
+
+    def submit(self, req: Request, arrival_s: float = 0.0) -> RequestHandle:
+        """Register a request (admitted at ``arrival_s`` seconds from
+        drain start under continuous policies) and return its handle."""
+        handle = RequestHandle(self, req)
+        if self.batch_mode:
+            if arrival_s:
+                raise ValueError(
+                    "batch admission serves closed batches — arrivals need "
+                    "a continuous admission policy (fifo | priority | edf)")
+            validate_request_fits(self.cfg, req, self.max_len)
+            self._pending.append(handle)
+        else:
+            handle._ticket = self.scheduler.submit(req, arrival_s)
+            handle._ticket.handle = handle
+        return handle
+
+    def step(self) -> List[Completion]:
+        """Advance the engine: one scheduler iteration (continuous), or
+        a full drain of the pending buckets (batch admission — buckets
+        are closed, there is no smaller step). Returns the completions
+        this step produced."""
+        if self.batch_mode:
+            return self._run_static(None)
+        if self.scheduler.done:
+            return []
+        return self.scheduler.step_once()
+
+    def run(self, on_completion: Optional[Callable[[Completion], None]] = None
+            ) -> List[Completion]:
+        """Drain every submitted request; completions sorted by id.
+        ``on_completion`` streams each completion the moment its request
+        finishes."""
+        if self.batch_mode:
+            return self._run_static(on_completion)
+        return self.scheduler.run(on_completion)
+
+    def generate(self, requests: List[Request], *,
+                 arrivals: Optional[List[float]] = None,
+                 on_completion: Optional[Callable[[Completion], None]] = None
+                 ) -> List[Completion]:
+        """Batch convenience: submit ``requests`` (each at its
+        ``arrivals`` instant — an open-loop workload) and drain."""
+        if arrivals is not None:
+            if self.batch_mode:
+                raise ValueError(
+                    "arrivals require a continuous admission policy — "
+                    "batch admission has no admission queue")
+            if len(arrivals) != len(requests):
+                raise ValueError(
+                    f"arrivals has {len(arrivals)} entries for "
+                    f"{len(requests)} requests")
+        for i, r in enumerate(requests):
+            self.submit(r, arrivals[i] if arrivals else 0.0)
+        return self.run(on_completion)
+
+    # -- introspection ------------------------------------------------------
+
+    def kv_stats(self) -> Dict[str, float]:
+        if self.scheduler is None:
+            raise ValueError("kv_stats needs a continuous admission policy "
+                             "(batch admission has no persistent KV cache)")
+        return self.scheduler.kv_stats()
+
+    def stats(self) -> Dict[str, int]:
+        if self.scheduler is None:
+            raise ValueError("stats needs a continuous admission policy")
+        return self.scheduler.stats()
+
+    # -- static-bucket executor (BatchAdmission) ----------------------------
+
+    def _run_static(self, on_completion) -> List[Completion]:
+        out: List[Completion] = []
+        handles, self._pending = self._pending, []
+        for h in [h for h in handles if h._cancelled]:
+            c = Completion(h.request.id, h.tokens, 0.0, 0.0,
+                           finish_reason="cancelled")
+            h._complete(c)
+            out.append(c)
+        live = [h for h in handles if not h._cancelled]
+        for _, hs in self.admission.buckets(
+                live, prompt_of=lambda h: h.request.prompt):
+            out.extend(self._run_bucket(hs))
+        if on_completion is not None:
+            for c in out:
+                on_completion(c)
+        return sorted(out, key=lambda c: c.id)
+
+    def _run_bucket(self, handles: List[RequestHandle]) -> List[Completion]:
+        """The seed static path, verbatim mechanics: one (batch, plen)
+        prefill + decode compile, greedy decode to completion — plus the
+        lifecycle hooks (per-token emit, cancellation flag checked before
+        every emission, eos-vs-length finish reasons)."""
+        reqs = [h.request for h in handles]
+        b = len(reqs)
+        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]))}
+        if reqs[0].embeds is not None:
+            batch["embeds"] = jnp.asarray(np.stack([r.embeds for r in reqs]))
+        t0 = time.perf_counter()
+        logits, cache, clen = jax.block_until_ready(
+            self._prefill(self.params, batch))
+        t1 = time.perf_counter()
+        max_new = max(r.max_new_tokens for r in reqs)
+        toks = self.sampler(logits)
+        done = np.zeros(b, bool)
+        reasons = ["length"] * b
+        for i, t in enumerate(np.asarray(toks)):
+            if handles[i]._cancelled:
+                done[i] = True
+                reasons[i] = "cancelled"
+            else:
+                handles[i]._emit(0, int(t))
+        for _ in range(max_new - 1):
+            if done.all():
+                break
+            logits, cache, clen = self._decode(self.params, toks, cache, clen)
+            toks = self.sampler(logits)
+            for i, t in enumerate(np.asarray(toks)):
+                if done[i]:
+                    continue
+                r = reqs[i]
+                if len(handles[i].tokens) >= r.max_new_tokens:
+                    # budget already spent: a length stop regardless of
+                    # what this step sampled or whether a late cancel()
+                    # raced in — the continuous path evicts at this point
+                    # without sampling, and the reasons must agree
+                    done[i] = True
+                    continue
+                if handles[i]._cancelled:
+                    done[i] = True
+                    reasons[i] = "cancelled"
+                    continue
+                if r.eos is not None and t == r.eos:
+                    done[i] = True
+                    reasons[i] = "eos"
+                else:
+                    handles[i]._emit(len(handles[i].tokens), int(t))
+        jax.block_until_ready(toks)
+        t2 = time.perf_counter()
+        out = []
+        for i, h in enumerate(handles):
+            reason = reasons[i]
+            if not done[i] and h._cancelled \
+                    and len(h.tokens) < reqs[i].max_new_tokens:
+                reason = "cancelled"
+            c = Completion(reqs[i].id, h.tokens, t1 - t0, t2 - t1,
+                           finish_reason=reason)
+            h._complete(c)
+            out.append(c)
+        return out

@@ -1,0 +1,201 @@
+"""Serving policies: admission order, preemption victims, sampling.
+
+The ``Engine``/``ContinuousScheduler`` split is policy vs mechanism: the
+scheduler owns the decode loop, KV layout surgery and failure handling
+(mechanism), while *which* request is admitted next, *who* gets
+preempted when the paged pool runs dry, and *how* logits become tokens
+are pluggable objects defined here — each testable in isolation with
+plain Python (no JAX, no model) by feeding it ticket-shaped records.
+
+Admission policies are priority orders, not queues: the scheduler keeps
+the waiting set and repeatedly admits ``min(waiting, key=policy.key)``.
+A smaller key means sooner. Every key ends with the submission sequence
+number, so ties break FIFO and the order is total (deterministic).
+Because greedy decoding is per-request deterministic regardless of what
+else shares the batch, *any* admission order emits tokens identical to
+the static-bucket path — policies change waiting time, never content.
+
+``BatchAdmission`` is the odd one out: it declares the static-bucket
+execution mode (the seed path — group requests by prompt length, compile
+per bucket, decode each bucket to completion). The ``Engine`` facade
+routes to the bucket executor when it sees this policy, so the legacy
+``mode="static-bucket"`` becomes just another admission policy instead
+of a parallel API.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key: jax.Array, logits: jax.Array, *, greedy: bool,
+                  temperature: float) -> Tuple[jax.Array, jax.Array]:
+    """Shared sampling rule for every engine path — the continuous ==
+    static token-identity contract depends on there being exactly one.
+    Returns (tokens (B,) int32, next key)."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+    key, sub = jax.random.split(key)
+    return jax.random.categorical(
+        sub, logits / temperature, axis=-1).astype(jnp.int32), key
+
+
+class Sampler:
+    """Owns the PRNG state for one engine. Greedy sampling never touches
+    the key, so every greedy configuration is trivially reproducible;
+    stochastic sampling splits the key per call, so the emitted stream
+    depends on the order of sample calls (which is why the token-identity
+    tests all run greedy)."""
+
+    def __init__(self, *, greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0):
+        self.greedy = greedy
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+    def __call__(self, logits: jax.Array) -> jax.Array:
+        toks, self.key = sample_tokens(self.key, logits, greedy=self.greedy,
+                                       temperature=self.temperature)
+        return toks
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+# ---------------------------------------------------------------------------
+# A ticket (scheduler._Ticket, or any duck-typed record in unit tests)
+# exposes: .req (with .priority / .deadline_s), .arrival_s, .submit_seq.
+
+
+class FifoAdmission:
+    """Arrival order; ties (equal arrival instants, e.g. a closed-loop
+    batch submitted at t=0) break by submission order. Failure/preemption
+    victims re-sort to the head automatically: they were admitted once,
+    so their (arrival_s, seq) precedes everything still waiting."""
+
+    name = "fifo"
+
+    def key(self, ticket) -> tuple:
+        return (ticket.arrival_s, ticket.submit_seq)
+
+
+class PriorityAdmission:
+    """Highest ``Request.priority`` first; FIFO within a priority level.
+    A late high-priority arrival jumps the queue at the next admission
+    boundary — it never displaces an already-running request (that is
+    the preemption policy's business, and only under pool pressure)."""
+
+    name = "priority"
+
+    def key(self, ticket) -> tuple:
+        return (-ticket.req.priority, ticket.arrival_s, ticket.submit_seq)
+
+
+class DeadlineAdmission:
+    """Earliest deadline first. ``Request.deadline_s`` is seconds from
+    the request's arrival; requests without a deadline sort last (they
+    are background work). FIFO among equal deadlines."""
+
+    name = "edf"
+
+    def key(self, ticket) -> tuple:
+        d = ticket.req.deadline_s
+        due = ticket.arrival_s + d if d is not None else math.inf
+        return (due, ticket.arrival_s, ticket.submit_seq)
+
+
+class BatchAdmission:
+    """The static-bucket mode as a policy: all requests are admitted as
+    closed batches bucketed by prompt length (one compiled
+    ``(batch, prompt_len)`` prefill/decode pair per bucket), each bucket
+    decoded to completion before the next starts — exactly the seed
+    ``ServeEngine`` path. The Engine routes to the bucket executor when
+    configured with this policy; there is no admission queue, so
+    ``arrivals=`` is rejected."""
+
+    name = "batch"
+
+    def buckets(self, items: Sequence[Any],
+                prompt_of=lambda r: r.prompt) -> List[Tuple[int, List[Any]]]:
+        """Group ``items`` (requests, or any carrier — ``prompt_of``
+        extracts the prompt) by prompt length, shortest bucket first."""
+        by_len: dict = {}
+        for it in items:
+            by_len.setdefault(len(prompt_of(it)), []).append(it)
+        return sorted(by_len.items())
+
+
+# ---------------------------------------------------------------------------
+# preemption policies
+# ---------------------------------------------------------------------------
+# Candidates are the tickets currently holding KV blocks (active slots
+# plus an in-flight chunked prefill), minus the slot whose growth needs
+# the blocks. .pick returns the victim ticket.
+
+
+class EvictLatest:
+    """Admission order wins: preempt the latest-admitted request, so the
+    oldest work always makes progress (no livelock — the survivor set
+    shrinks toward the single oldest request, whose worst case is
+    validated to fit the pool at submit time)."""
+
+    name = "evict-latest"
+
+    def pick(self, candidates: List[Any]):
+        return max(candidates, key=lambda t: t.admit_seq)
+
+
+class LowestPriority:
+    """Preempt the lowest-priority holder; among equals, the latest
+    admitted. High-priority work keeps its KV blocks under pool pressure
+    at the cost of restarting background requests."""
+
+    name = "lowest-priority"
+
+    def pick(self, candidates: List[Any]):
+        return min(candidates, key=lambda t: (t.req.priority, -t.admit_seq))
+
+
+# ---------------------------------------------------------------------------
+# factories (EngineConfig carries policy names or instances)
+# ---------------------------------------------------------------------------
+
+ADMISSION_POLICIES = {
+    "fifo": FifoAdmission,
+    "priority": PriorityAdmission,
+    "edf": DeadlineAdmission,
+    "deadline": DeadlineAdmission,
+    "batch": BatchAdmission,
+    "static-bucket": BatchAdmission,    # legacy mode name
+}
+
+PREEMPTION_POLICIES = {
+    "evict-latest": EvictLatest,
+    "lowest-priority": LowestPriority,
+}
+
+
+def make_admission(spec) -> Any:
+    """Resolve an admission policy name or pass an instance through."""
+    if isinstance(spec, str):
+        try:
+            return ADMISSION_POLICIES[spec]()
+        except KeyError:
+            raise ValueError(
+                f"admission policy {spec!r} not in "
+                f"{sorted(set(ADMISSION_POLICIES))}") from None
+    return spec
+
+
+def make_preemption(spec) -> Any:
+    """Resolve a preemption policy name or pass an instance through."""
+    if isinstance(spec, str):
+        try:
+            return PREEMPTION_POLICIES[spec]()
+        except KeyError:
+            raise ValueError(
+                f"preemption policy {spec!r} not in "
+                f"{sorted(PREEMPTION_POLICIES)}") from None
+    return spec

@@ -1,53 +1,59 @@
-"""Continuous-batching request scheduler (slot- or page-based KV cache).
+"""Continuous-batching request scheduler: mechanism under pluggable policies.
 
-The static-bucket ``ServeEngine`` path groups requests by prompt length
-and decodes each bucket to completion with its own compiled
-``(batch, prompt_len)`` functions: a new bucket shape means a new XLA
-compile, and a short request parks its finished KV rows in the batch
-until the longest request in the bucket drains.
+The scheduler is the *mechanism* half of the serving stack (the policy
+half lives in ``runtime.policies``; the user-facing facade is
+``runtime.engine.Engine``). It owns:
 
-The scheduler replaces that with the continuous-batching pattern:
+* the decode loop — one decode function compiled ONCE at a fixed slot
+  count ``max_slots``; requests join and leave the running batch between
+  steps without recompiling;
+* the KV cache, behind a ``KVLayout`` object in one of two shapes:
 
-* one decode function compiled ONCE at a fixed slot count ``max_slots`` —
-  requests join and leave the running batch without recompiling;
-* a persistent KV cache in one of two layouts:
-
-  - **slotted** (``init_cache(cfg, max_slots, max_len)``): every slot
-    owns ``max_len`` dense KV rows. Simple, but a short request strands
-    most of its rows for its whole lifetime;
-  - **paged** (``SchedulerConfig(paged=True)``): global-attention K/V
-    live in a shared pool of fixed-size blocks
+  - ``SlottedLayout`` (``init_cache(cfg, max_slots, max_len)``): every
+    slot owns ``max_len`` dense KV rows. Simple, but a short request
+    strands most of its rows for its whole lifetime;
+  - ``PagedLayout`` (``SchedulerConfig(paged=True)``): global-attention
+    K/V live in a shared pool of fixed-size blocks
     (``init_paged_cache``), handed out by a ``BlockAllocator`` — on
     admission for the prompt, block-by-block during decode growth —
     and addressed through per-slot block tables. A request holds only
     the blocks its context actually fills; eviction/failure returns
     them (exactly once) to the pool. When the pool is exhausted,
-    admission *waits* instead of over-committing, and decode growth
-    preempts (re-queues, never drops) the latest-admitted request.
+    admission *waits* instead of over-committing (an admission
+    ``watermark`` can additionally hold back the last few blocks to
+    damp growth-preemption thrash), and decode growth preempts
+    (re-queues, never drops) a victim chosen by the preemption policy;
 
-* an admission queue: requests arrive (optionally timestamped, e.g.
-  Poisson arrivals in the serving bench), wait FIFO for a free slot, and
-  are admitted *between* decode steps — work is re-admitted mid-flight
-  exactly as the fault-tolerant Edge-PRUNE follow-up assumes;
+* the waiting set — *which* waiting request is admitted next is the
+  injected ``AdmissionPolicy``'s call (``min(waiting, key=policy.key)``,
+  FIFO by default); *who* is preempted under pool pressure is the
+  ``PreemptionPolicy``'s (latest-admitted by default); *how* logits
+  become tokens is the ``Sampler``'s, which owns the PRNG state;
 * **chunked prefill** (``SchedulerConfig(prefill_chunk=C)``): admission
   prefills a prompt in C-token ``prefill_extend`` steps interleaved with
   decode steps, so a long prompt no longer freezes every active stream
-  for its whole prefill — the admission stall is bounded by one chunk.
+  for its whole prefill — the admission stall is bounded by one chunk;
+* the request lifecycle — per-token streaming to a ``RequestHandle``,
+  cancellation (a cancelled request never emits another token once
+  ``cancel()`` returns), injected ``SlotFailure`` re-queue/terminate,
+  and a ``finish_reason`` on every ``Completion``.
 
 Per-slot ``cache_len`` is what makes the shared batch sound: the decode
 attention masks every cache row at position >= cache_len[slot], so slots
 holding different-length contexts (or nothing at all) coexist in one
-batched step. Under greedy sampling the emitted tokens are bit-identical
-to the static-bucket path — in every layout combination (see
-tests/test_scheduler.py).
+batched step. Greedy decoding is per-request deterministic regardless of
+admission order, so under greedy sampling every layout/policy
+combination emits tokens bit-identical to the static-bucket path (see
+tests/test_scheduler.py, tests/test_engine_lifecycle.py).
 
 ``Request``/``Completion`` live here (serving.py re-exports them) so the
 engine can delegate without an import cycle.
 """
 from __future__ import annotations
 
+import heapq
 import time
-from collections import deque
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -57,18 +63,17 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.policies import (BatchAdmission, EvictLatest,
+                                    FifoAdmission, Sampler, make_admission,
+                                    make_preemption, sample_tokens)
 
+__all__ = [
+    "Request", "Completion", "SchedulerConfig", "SchedEvent", "SlotFailure",
+    "BlockAllocator", "SlottedLayout", "PagedLayout", "ContinuousScheduler",
+    "sample_tokens", "validate_request_fits", "FINISH_REASONS",
+]
 
-def sample_tokens(key: jax.Array, logits: jax.Array, *, greedy: bool,
-                  temperature: float) -> Tuple[jax.Array, jax.Array]:
-    """Shared sampling rule for both scheduler modes — the continuous ==
-    static token-identity contract depends on there being exactly one.
-    Returns (tokens (B,) int32, next key)."""
-    if greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
-    key, sub = jax.random.split(key)
-    return jax.random.categorical(
-        sub, logits / temperature, axis=-1).astype(jnp.int32), key
+FINISH_REASONS = ("eos", "length", "cancelled", "failed")
 
 
 @dataclass
@@ -78,6 +83,13 @@ class Request:
     max_new_tokens: int = 16
     eos: Optional[int] = None
     embeds: Optional[np.ndarray] = None     # VLM/audio frontend output
+    # lifecycle / policy fields
+    priority: int = 0                       # higher = sooner (priority policy)
+    deadline_s: Optional[float] = None      # seconds from arrival (EDF)
+    # how many failure/preemption restarts before the request completes
+    # as "failed" instead of re-queueing; None = restart forever (the
+    # pre-lifecycle behavior, and the token-identity default)
+    max_restarts: Optional[int] = None
 
 
 @dataclass
@@ -91,6 +103,10 @@ class Completion:
     arrival_s: float = 0.0
     first_token_s: float = 0.0
     finish_s: float = 0.0
+    # why the request stopped: "eos" | "length" | "cancelled" | "failed"
+    finish_reason: str = "length"
+    # times the request was re-queued (slot failure or pool preemption)
+    restarts: int = 0
 
     @property
     def ttft_s(self) -> float:
@@ -104,7 +120,7 @@ class Completion:
 
 def validate_request_fits(cfg: ModelConfig, req: Request,
                           max_len: int) -> None:
-    """Shared admission check for both engine modes. Decode writes KV
+    """Shared admission check for every engine path. Decode writes KV
     rows at positions len(prompt) .. len(prompt) + max_new_tokens - 2;
     on an uncapped global-attention cache, rows past max_len would
     silently wrap the ring onto the prompt and corrupt the context.
@@ -139,6 +155,11 @@ class SchedulerConfig:
     paged: bool = False
     block_size: int = 16        # KV rows per block
     num_blocks: int = 0
+    # admission watermark: require this many free blocks beyond the
+    # prompt's need before admitting, so decode growth of the already-
+    # running requests doesn't immediately preempt the newcomer back out
+    # (growth-preemption thrash under oversubscription)
+    watermark: int = 0
     # chunked prefill: admit prompts prefill_chunk tokens at a time,
     # interleaved with decode steps (0 = one-shot prefill). Falls back to
     # one-shot for configs/requests outside supports_chunked_prefill.
@@ -149,9 +170,10 @@ class SchedulerConfig:
 
 @dataclass
 class SchedEvent:
-    """Observable admission/eviction trace (asserted on by tests)."""
+    """Observable admission/eviction trace (asserted on by tests).
+    ``kind`` is "admit" | "evict" | "fail" | "preempt" | "cancel"."""
     t_s: float
-    kind: str                   # "admit" | "evict" | "fail" | "preempt"
+    kind: str
     request_id: int
     slot: int
     step: int                   # decode-step counter at event time
@@ -176,7 +198,9 @@ class BlockAllocator:
     None when the request can't be satisfied — the scheduler queues or
     preempts instead of over-committing — and ``free`` raises on a block
     that isn't currently held, so a double-free is an error, not silent
-    pool corruption."""
+    pool corruption. ``alloc(n, watermark=w)`` additionally refuses to
+    dip into the last ``w`` free blocks — the admission-time damper that
+    keeps headroom for the running requests' decode growth."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 2:
@@ -200,8 +224,8 @@ class BlockAllocator:
     def in_use(self) -> int:
         return len(self._held)
 
-    def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+    def alloc(self, n: int, watermark: int = 0) -> Optional[List[int]]:
+        if n + watermark > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
         self._held.update(blocks)
@@ -227,16 +251,251 @@ class BlockAllocator:
         assert 0 not in self._held and 0 not in self._free
 
 
-@dataclass
-class _Ticket:
+# ---------------------------------------------------------------------------
+# KV layouts: the cache-shape half of the old monolith, one object each
+# ---------------------------------------------------------------------------
+
+class SlottedLayout:
+    """Dense per-slot KV rows: slot ``i`` owns rows ``[i, :max_len]`` of
+    every cache leaf. Reservation always succeeds (the rows exist by
+    construction), growth never happens, release is a no-op."""
+
+    paged = False
+
+    def __init__(self, cfg: ModelConfig, s: SchedulerConfig, max_len: int,
+                 scratch_len: int):
+        self.max_len = max_len
+        self.cache = T.init_cache(cfg, s.max_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache,
+                                                      clen))
+        self._insert = jax.jit(self._insert_impl)
+        self._insert_sliced = jax.jit(self._insert_sliced_impl)
+
+    @staticmethod
+    def _insert_impl(batch_cache, req_cache, slot):
+        """Write a batch=1 prefill cache into slot ``slot`` of the shared
+        batch cache. Scanned-period leaves are (P, B, ...), remainder
+        leaves (B, ...)."""
+        scan = jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
+                            batch_cache["scan"], req_cache["scan"])
+        rem = jax.tree.map(lambda big, small: big.at[slot].set(small[0]),
+                           batch_cache["rem"], req_cache["rem"])
+        return {"scan": scan, "rem": rem}
+
+    def _insert_sliced_impl(self, batch_cache, req_cache, slot):
+        """Insert from the chunk-rounded scratch cache: keep the first
+        max_len rows of every K/V leaf. Only reachable for chunked-
+        prefill configs (all-global-attn), where every cache leaf has the
+        row dim right after batch."""
+        ml = self.max_len
+        scan = jax.tree.map(
+            lambda big, small: big.at[:, slot].set(small[:, 0, :ml]),
+            batch_cache["scan"], req_cache["scan"])
+        rem = jax.tree.map(
+            lambda big, small: big.at[slot].set(small[0, :ml]),
+            batch_cache["rem"], req_cache["rem"])
+        return {"scan": scan, "rem": rem}
+
+    def validate(self, req: Request) -> None:
+        pass
+
+    def try_reserve(self, req: Request) -> Optional[List[int]]:
+        return []
+
+    def bind(self, slot: int, blocks: List[int]) -> None:
+        pass
+
+    def insert(self, req_cache, slot: int) -> None:
+        self.cache = self._insert(self.cache, req_cache, jnp.int32(slot))
+
+    def insert_scratch(self, scratch_cache, slot: int) -> None:
+        self.cache = self._insert_sliced(self.cache, scratch_cache,
+                                         jnp.int32(slot))
+
+    def decode(self, params, tokens: jax.Array, cache_len: jax.Array):
+        logits, self.cache, _ = self._decode(params, tokens, self.cache,
+                                             cache_len)
+        return logits
+
+    def needs_block(self, slot: int, pos: int) -> bool:
+        return False
+
+    def grow_one(self, slot: int, pos: int) -> bool:
+        raise RuntimeError("slotted layout never grows")
+
+    def release(self, slot: int) -> None:
+        pass
+
+    def kv_stats(self, s: SchedulerConfig, cfg: ModelConfig) -> Dict[str, float]:
+        row = T.kv_row_bytes(cfg)
+        return {"slotted_kv_reserved_bytes":
+                float(s.max_slots * s.max_len * row)}
+
+    def check(self, occupied_slots: set, max_slots: int) -> None:
+        pass
+
+
+class PagedLayout:
+    """Block-pool KV: global-attention K/V in shared fixed-size blocks
+    addressed through per-slot block tables; local-window / recurrent
+    state stays slot-indexed inside the same cache pytree. Owns the
+    allocator, the tables, and the per-slot block bookkeeping (freed
+    exactly once on release, whoever triggers it)."""
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, s: SchedulerConfig, max_len: int,
+                 scratch_len: int):
+        if cfg.max_cache_len:
+            raise ValueError(
+                "paged KV cache is position-indexed; max_cache_len ring "
+                "caps are a slotted-path feature")
+        if all(k != "attn" for k in cfg.layer_kinds):
+            raise ValueError(
+                f"{cfg.name}: paged KV cache pages global-attention K/V, "
+                "but this config has none (local windows and recurrent "
+                "state are fixed-size per slot) — use the slotted layout; "
+                "its memory is already bounded")
+        self.max_len = max_len
+        self.block_size = s.block_size
+        self.watermark = s.watermark
+        self.pages_per_slot = max_len // s.block_size
+        num_blocks = s.num_blocks or (s.max_slots * self.pages_per_slot + 1)
+        self.alloc = BlockAllocator(num_blocks, s.block_size)
+        if self.watermark >= self.alloc.capacity:
+            raise ValueError(
+                f"watermark {self.watermark} leaves no admissible blocks "
+                f"in a pool of {self.alloc.capacity}")
+        self.block_tables = np.zeros((s.max_slots, self.pages_per_slot),
+                                     np.int32)
+        self._slot_blocks: Dict[int, List[int]] = {}
+        self.cache = T.init_paged_cache(cfg, num_blocks, s.block_size,
+                                        s.max_slots, max_len=max_len)
+        self._decode = jax.jit(
+            lambda p, tok, cache, clen, tbl: T.decode_step(
+                p, cfg, tok, cache, clen, block_tables=tbl))
+        self._insert_paged = jax.jit(
+            lambda c, rc, bids, slot: T.paged_insert(
+                cfg, c, rc, bids, slot, block_size=s.block_size))
+
+    def _prompt_need(self, req: Request) -> int:
+        return max(1, -(-len(req.prompt) // self.block_size))
+
+    def validate(self, req: Request) -> None:
+        """Reject requests the pool can never serve. Two separate
+        bounds: the worst case must fit the *whole* pool (decode growth
+        bypasses the watermark, and _grow_blocks' termination guarantee
+        rests on this), and the prompt plus the watermark must fit at
+        admission time (else the request waits forever)."""
+        rows = max(1, len(req.prompt) + max(req.max_new_tokens - 1, 0))
+        worst = -(-rows // self.block_size)
+        if worst > self.alloc.capacity:
+            raise ValueError(
+                f"request {req.id}: needs {worst} KV blocks worst-case, "
+                f"pool holds {self.alloc.capacity}")
+        prompt_need = self._prompt_need(req)
+        if prompt_need + self.watermark > self.alloc.capacity:
+            raise ValueError(
+                f"request {req.id}: prompt needs {prompt_need} KV blocks "
+                f"but admission holds back watermark {self.watermark} of "
+                f"{self.alloc.capacity} — can never be admitted")
+
+    def try_reserve(self, req: Request) -> Optional[List[int]]:
+        return self.alloc.alloc(self._prompt_need(req),
+                                watermark=self.watermark)
+
+    def bind(self, slot: int, blocks: List[int]) -> None:
+        self.block_tables[slot, :len(blocks)] = blocks
+        self._slot_blocks[slot] = list(blocks)
+
+    def insert(self, req_cache, slot: int) -> None:
+        self.cache = self._insert_paged(
+            self.cache, req_cache, jnp.asarray(self.block_tables[slot]),
+            jnp.int32(slot))
+
+    # the chunk-rounded scratch cache inserts through the same block
+    # table; rows past the table's coverage are never addressed
+    insert_scratch = insert
+
+    def decode(self, params, tokens: jax.Array, cache_len: jax.Array):
+        logits, self.cache, _ = self._decode(
+            params, tokens, self.cache, cache_len,
+            jnp.asarray(self.block_tables))
+        return logits
+
+    def needs_block(self, slot: int, pos: int) -> bool:
+        return not self.block_tables[slot, pos // self.block_size]
+
+    def grow_one(self, slot: int, pos: int) -> bool:
+        """Allocate the block covering position ``pos`` for ``slot``.
+        Growth ignores the admission watermark — the headroom it guards
+        exists precisely for the running requests' growth."""
+        blocks = self.alloc.alloc(1)
+        if blocks is None:
+            return False
+        self.block_tables[slot, pos // self.block_size] = blocks[0]
+        self._slot_blocks[slot].append(blocks[0])
+        return True
+
+    def release(self, slot: int) -> None:
+        blocks = self._slot_blocks.pop(slot, [])
+        if blocks:
+            self.alloc.free(blocks)
+        self.block_tables[slot] = 0
+
+    def kv_stats(self, s: SchedulerConfig, cfg: ModelConfig) -> Dict[str, float]:
+        row = T.kv_row_bytes(cfg)
+        bs = s.block_size
+        # the slotted baseline reserves the *configured* max_len, not the
+        # paged path's block-rounded max_len
+        return {
+            "slotted_kv_reserved_bytes": float(s.max_slots * s.max_len * row),
+            "paged_kv_pool_bytes": float(self.alloc.capacity * bs * row),
+            "paged_kv_hwm_bytes": float(self.alloc.hwm * bs * row),
+            "paged_kv_hwm_blocks": float(self.alloc.hwm),
+        }
+
+    def check(self, occupied_slots: set, max_slots: int) -> None:
+        """Block books: every held block is named by exactly one table
+        entry of exactly one occupied slot."""
+        self.alloc.check()
+        assert set(self._slot_blocks) == occupied_slots, \
+            (set(self._slot_blocks), occupied_slots)
+        held: List[int] = []
+        for blocks in self._slot_blocks.values():
+            held.extend(blocks)
+        assert len(held) == len(set(held)), "block owned by two slots"
+        assert set(held) == self.alloc._held, (set(held), self.alloc._held)
+        for slot in range(max_slots):
+            if slot not in occupied_slots:
+                assert not self.block_tables[slot].any(), \
+                    f"slot {slot}: stale block table"
+        table_entries = self.block_tables[self.block_tables > 0]
+        assert len(table_entries) == len(set(table_entries.tolist())), \
+            "block mapped by two table entries"
+        assert set(table_entries.tolist()) == self.alloc._held
+
+
+# ---------------------------------------------------------------------------
+# tickets
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)                    # identity semantics: list/backlog
+class _Ticket:                          # removal must never compare prompts
     req: Request
     arrival_s: float
+    submit_seq: int = -1        # submission order (admission tie-break)
     slot: int = -1
     emitted: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     first_token_s: float = 0.0
-    blocks: List[int] = field(default_factory=list)   # paged mode
-    admit_seq: int = -1         # admission order (preemption picks latest)
+    admit_seq: int = -1         # admission order (preemption input)
+    restarts: int = 0           # failure/preemption re-queues so far
+    cancelled: bool = False     # set via request_cancel()
+    retired: bool = False       # completed while a stale heap entry remains
+    where: str = "backlog"      # backlog | queued | active | chunking | done
+    handle: Any = None          # RequestHandle, when served via Engine
 
 
 @dataclass
@@ -252,39 +511,44 @@ class _ChunkedPrefill:
 
 
 class ContinuousScheduler:
-    """Admission queue + shared decode batch over a slot/paged KV cache."""
+    """Admission queue + shared decode batch over a slot/paged KV cache.
+
+    Policies are injected (``admission``, ``preemption``, ``sampler``) —
+    names or instances from ``runtime.policies``; the defaults (FIFO,
+    evict-latest, greedy) reproduce the pre-policy scheduler exactly."""
 
     def __init__(self, cfg: ModelConfig, params: Any,
                  sched: Optional[SchedulerConfig] = None, *,
-                 failures: Optional[List[SlotFailure]] = None):
+                 failures: Optional[List[SlotFailure]] = None,
+                 admission: Any = None, preemption: Any = None,
+                 sampler: Optional[Sampler] = None):
         self.cfg = cfg
         self.params = params
-        self.sched = sched or SchedulerConfig()
+        self.sched = s = sched or SchedulerConfig()
+        self.admission = make_admission(admission) if admission is not None \
+            else FifoAdmission()
+        if isinstance(self.admission, BatchAdmission):
+            raise ValueError(
+                "batch admission is the Engine's static-bucket path; the "
+                "continuous scheduler needs an ordering policy "
+                "(fifo | priority | edf)")
+        self.preemption = make_preemption(preemption) \
+            if preemption is not None else EvictLatest()
+        self.sampler = sampler or Sampler(greedy=s.greedy,
+                                          temperature=s.temperature,
+                                          seed=s.seed)
         # Injected slot failures, applied at decode-step boundaries. A
         # cursor (not destructive pops) tracks what has been applied, so
         # run() is re-entrant: a second run() with new submissions still
         # sees failures the first drain never reached.
         self.failures = sorted(failures or [], key=lambda f: f.step)
         self._failure_pos = 0
-        s = self.sched
-        if s.paged and cfg.max_cache_len:
-            raise ValueError(
-                "paged KV cache is position-indexed; max_cache_len ring "
-                "caps are a slotted-path feature")
-        if s.paged and all(k != "attn" for k in cfg.layer_kinds):
-            raise ValueError(
-                f"{cfg.name}: paged KV cache pages global-attention K/V, "
-                "but this config has none (local windows and recurrent "
-                "state are fixed-size per slot) — use the slotted layout; "
-                "its memory is already bounded")
         # paged mode wants a whole number of blocks per slot
         self.max_len = s.max_len if not s.paged else \
             -(-s.max_len // s.block_size) * s.block_size
-        self.key = jax.random.PRNGKey(s.seed)
         max_len = self.max_len
         self._prefill_fn = jax.jit(
             lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
-        self._insert = jax.jit(self._insert_impl)
         # chunked prefill (gated to configs the extend path supports)
         self._chunk = s.prefill_chunk \
             if (s.prefill_chunk > 0 and T.supports_chunked_prefill(cfg)) \
@@ -294,89 +558,112 @@ class ContinuousScheduler:
         if self._chunk:
             self._extend_fn = jax.jit(
                 lambda p, tok, c, cl: T.prefill_extend(p, cfg, tok, c, cl))
-            self._insert_sliced = jax.jit(self._insert_sliced_impl)
         self._chunking: Optional[_ChunkedPrefill] = None
-        # Persistent slot state. cache_len/tokens/block_tables are host-
-        # side mirrors so admission/eviction never touches device state
-        # beyond the insert.
-        if s.paged:
-            self.pages_per_slot = max_len // s.block_size
-            num_blocks = s.num_blocks or \
-                (s.max_slots * self.pages_per_slot + 1)
-            self.alloc = BlockAllocator(num_blocks, s.block_size)
-            self.block_tables = np.zeros(
-                (s.max_slots, self.pages_per_slot), np.int32)
-            self.cache = T.init_paged_cache(cfg, num_blocks, s.block_size,
-                                            s.max_slots, max_len=max_len)
-            self._decode = jax.jit(
-                lambda p, tok, cache, clen, tbl: T.decode_step(
-                    p, cfg, tok, cache, clen, block_tables=tbl))
-            self._insert_paged = jax.jit(
-                lambda c, rc, bids, slot: T.paged_insert(
-                    cfg, c, rc, bids, slot, block_size=s.block_size))
-        else:
-            self.alloc = None
-            self.block_tables = None
-            self.cache = T.init_cache(cfg, s.max_slots, max_len)
-            self._decode = jax.jit(
-                lambda p, tok, cache, clen: T.decode_step(p, cfg, tok,
-                                                          cache, clen))
+        layout_cls = PagedLayout if s.paged else SlottedLayout
+        self.layout = layout_cls(cfg, s, max_len, self._scratch_len)
+        # Persistent slot state. cache_len/tokens (and the layout's block
+        # tables) are host-side mirrors so admission/eviction never
+        # touches device state beyond the insert.
         self.cache_len = np.zeros((s.max_slots,), np.int32)
         self.tokens = np.zeros((s.max_slots,), np.int32)
         self.free: List[int] = list(range(s.max_slots))[::-1]  # pop() -> 0,1,..
         self.active: Dict[int, _Ticket] = {}
-        self.queue: deque = deque()     # tickets waiting for a slot (FIFO)
+        # waiting set: a heap keyed by the admission policy's (static,
+        # total-order) key, so each admission is O(log n) instead of a
+        # min-scan + remove. Cancelled entries are retired in place and
+        # skipped lazily at the top; _queue_stale counts them.
+        self.queue: List[tuple] = []
+        self._queue_stale = 0
         self.backlog: List[_Ticket] = []  # submitted, not yet "arrived"
         self._backlog_pos = 0           # consumed-prefix cursor into backlog
+        self._backlog_dirty = False
         self._admit_seq = 0
+        self._submit_seq = 0
         self.events: List[SchedEvent] = []
         self.step_count = 0
+        self._t0: Optional[float] = None
+        self._cancel_requests: List[_Ticket] = []   # via request_cancel()
 
-    # -- slot cache surgery -------------------------------------------------
+    # -- legacy attribute surface (tests/benches reach for these) -----------
 
-    @staticmethod
-    def _insert_impl(batch_cache, req_cache, slot):
-        """Write a batch=1 prefill cache into slot ``slot`` of the shared
-        batch cache. Scanned-period leaves are (P, B, ...), remainder
-        leaves (B, ...)."""
-        scan = jax.tree.map(lambda big, small: big.at[:, slot].set(small[:, 0]),
-                            batch_cache["scan"], req_cache["scan"])
-        rem = jax.tree.map(lambda big, small: big.at[slot].set(small[0]),
-                           batch_cache["rem"], req_cache["rem"])
-        return {"scan": scan, "rem": rem}
+    @property
+    def alloc(self) -> Optional[BlockAllocator]:
+        return getattr(self.layout, "alloc", None)
 
-    def _insert_sliced_impl(self, batch_cache, req_cache, slot):
-        """Slotted insert from the chunk-rounded scratch cache: keep the
-        first max_len rows of every K/V leaf. Only reachable for chunked-
-        prefill configs (all-global-attn), where every cache leaf has the
-        row dim right after batch."""
-        ml = self.max_len
-        scan = jax.tree.map(
-            lambda big, small: big.at[:, slot].set(small[:, 0, :ml]),
-            batch_cache["scan"], req_cache["scan"])
-        rem = jax.tree.map(
-            lambda big, small: big.at[slot].set(small[0, :ml]),
-            batch_cache["rem"], req_cache["rem"])
-        return {"scan": scan, "rem": rem}
+    @property
+    def block_tables(self) -> Optional[np.ndarray]:
+        return getattr(self.layout, "block_tables", None)
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        toks, self.key = sample_tokens(self.key, logits,
-                                       greedy=self.sched.greedy,
-                                       temperature=self.sched.temperature)
-        return toks
+    @property
+    def cache(self):
+        return self.layout.cache
+
+    @property
+    def key(self) -> jax.Array:
+        return self.sampler.key
+
+    @key.setter
+    def key(self, k: jax.Array) -> None:
+        self.sampler.key = k
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, req: Request, arrival_s: float = 0.0) -> None:
+    def submit(self, req: Request, arrival_s: float = 0.0) -> _Ticket:
+        """Queue a request for admission at ``arrival_s`` (seconds from
+        drain start). Returns the internal ticket — the Engine wraps it
+        in a ``RequestHandle``; direct callers can ignore it."""
         validate_request_fits(self.cfg, req, self.max_len)
-        if self.sched.paged:
-            rows = max(1, len(req.prompt) + max(req.max_new_tokens - 1, 0))
-            need = -(-rows // self.sched.block_size)
-            if need > self.alloc.capacity:
-                raise ValueError(
-                    f"request {req.id}: needs {need} KV blocks worst-case, "
-                    f"pool holds {self.alloc.capacity}")
-        self.backlog.append(_Ticket(req=req, arrival_s=arrival_s))
+        self.layout.validate(req)
+        if self.done:
+            # a fresh drain after a completed one starts a fresh arrival
+            # epoch, whichever drive path (run() or step_once()) follows
+            self._t0 = None
+        ticket = _Ticket(req=req, arrival_s=arrival_s,
+                         submit_seq=self._submit_seq)
+        self._submit_seq += 1
+        self.backlog.append(ticket)
+        self._backlog_dirty = True
+        return ticket
+
+    def request_cancel(self, ticket: _Ticket) -> None:
+        """Flag a ticket for cancellation (the RequestHandle's path).
+        Only flips a flag and records the ticket — retirement happens at
+        the next step boundary (or inside the admission loop, for a
+        cancel issued from another stream's token callback mid-pass), so
+        this is safe to call from inside a token callback. The recorded
+        list keeps the purge O(#cancelled), not O(waiting)."""
+        ticket.cancelled = True
+        self._cancel_requests.append(ticket)
+
+    @property
+    def done(self) -> bool:
+        """True when nothing is queued, active, mid-prefill, or pending
+        arrival — a step_once() now would be a no-op."""
+        return (self._backlog_pos >= len(self.backlog)
+                and self._waiting() == 0
+                and not self.active and self._chunking is None)
+
+    # -- waiting-set heap ---------------------------------------------------
+
+    def _waiting(self) -> int:
+        return len(self.queue) - self._queue_stale
+
+    def _enqueue(self, ticket: _Ticket) -> None:
+        """Push into the waiting heap under the admission policy's key
+        (computed once — policy inputs are static per ticket); the
+        submit_seq tiebreak keeps entries totally ordered without ever
+        comparing tickets."""
+        ticket.where = "queued"
+        heapq.heappush(self.queue, (self.admission.key(ticket),
+                                    ticket.submit_seq, ticket))
+
+    def _queue_head(self) -> Optional[_Ticket]:
+        """The policy's next pick, skipping entries retired by
+        cancellation (lazy deletion)."""
+        while self.queue and self.queue[0][2].retired:
+            heapq.heappop(self.queue)
+            self._queue_stale -= 1
+        return self.queue[0][2] if self.queue else None
 
     def run(self, on_completion: Optional[Callable[[Completion], None]] = None
             ) -> List[Completion]:
@@ -384,71 +671,118 @@ class ContinuousScheduler:
         ``on_completion`` (streaming mode) is invoked with each completion
         the moment its request finishes, before the drain returns.
         Re-entrant: a later run() continues from the same step counter and
-        failure cursor, serving anything submitted since."""
-        t0 = time.perf_counter()
+        failure cursor, serving anything submitted since (arrivals are
+        measured from *this* call when the scheduler is idle; a drain
+        resumed mid-flight — e.g. after step-driven streaming — keeps
+        the original epoch so in-flight timestamps stay coherent)."""
+        if self._t0 is None or (self._waiting() == 0 and not self.active
+                                and self._chunking is None):
+            self._t0 = time.perf_counter()
+        self._sort_pending()
         out: List[Completion] = []
-        pending = sorted(self.backlog[self._backlog_pos:],
-                         key=lambda t: t.arrival_s)
-        self.backlog[self._backlog_pos:] = pending
-        while (self._backlog_pos < len(self.backlog) or self.queue
-               or self.active or self._chunking is not None):
-            now = time.perf_counter() - t0
-            while (self._backlog_pos < len(self.backlog)
-                   and self.backlog[self._backlog_pos].arrival_s <= now):
-                self.queue.append(self.backlog[self._backlog_pos])
-                self._backlog_pos += 1
-            if not self.queue and not self.active and self._chunking is None:
+        while not self.done:
+            out.extend(self.step_once(on_completion))
+        return sorted(out, key=lambda c: c.id)
+
+    def step_once(self, on_completion: Optional[
+            Callable[[Completion], None]] = None) -> List[Completion]:
+        """One scheduler iteration: deliver arrivals, purge cancellations,
+        apply due failures, advance the in-flight chunked prefill, admit,
+        and (if anything is active) run one decode step. Returns the
+        completions this iteration produced. Drives the step-wise Engine
+        API (``RequestHandle.stream()`` pulls this between tokens)."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        if self._backlog_dirty:
+            self._sort_pending()
+        t0 = self._t0
+        done: List[Completion] = []
+        now = time.perf_counter() - t0
+        while (self._backlog_pos < len(self.backlog)
+               and self.backlog[self._backlog_pos].arrival_s <= now):
+            self._enqueue(self.backlog[self._backlog_pos])
+            self._backlog_pos += 1
+        done.extend(self._purge_cancelled(t0))
+        if (self._waiting() == 0 and not self.active
+                and self._chunking is None):
+            if self._backlog_pos < len(self.backlog):
                 # idle until the next arrival (virtual clock = wall
                 # clock). Failures due at this step boundary still apply
                 # — they must not be silently deferred past the gap.
-                self._apply_failures(t0)
+                done.extend(self._apply_failures(t0))
                 time.sleep(max(
                     0.0, self.backlog[self._backlog_pos].arrival_s - now))
-                continue
-            self._apply_failures(t0)
-            self._advance_chunked(t0)
-            self._admit(t0)
-            if self.active:
-                done = self._decode_step(t0)
-                if on_completion is not None:
-                    for c in done:
-                        on_completion(c)
-                out.extend(done)
-            if self.sched.debug:
-                self._check_invariants()
-        return sorted(out, key=lambda c: c.id)
+            return self._deliver(done, on_completion)
+        done.extend(self._apply_failures(t0))
+        self._advance_chunked(t0)
+        done.extend(self._admit(t0))
+        if self.active:
+            done.extend(self._decode_step(t0))
+        if self.sched.debug:
+            self._check_invariants()
+        return self._deliver(done, on_completion)
 
     def kv_stats(self) -> Dict[str, float]:
         """KV-memory accounting for the serving bench: what a dense
         slotted cache reserves vs what the paged pool holds / has ever
         held (high-water mark), in bytes of global-attention K/V."""
-        row = T.kv_row_bytes(self.cfg)
-        s = self.sched
-        # the slotted baseline reserves the *configured* max_len, not the
-        # paged path's block-rounded self.max_len
-        out = {"slotted_kv_reserved_bytes":
-               float(s.max_slots * s.max_len * row)}
-        if s.paged:
-            bs = s.block_size
-            out["paged_kv_pool_bytes"] = float(self.alloc.capacity * bs * row)
-            out["paged_kv_hwm_bytes"] = float(self.alloc.hwm * bs * row)
-            out["paged_kv_hwm_blocks"] = float(self.alloc.hwm)
-        return out
+        return self.layout.kv_stats(self.sched, self.cfg)
+
+    def stats(self) -> Dict[str, int]:
+        """Lifecycle counters accumulated so far (the serving bench
+        reports preemptions when sweeping the admission watermark)."""
+        c = Counter(e.kind for e in self.events)
+        return {"admissions": c["admit"], "evictions": c["evict"],
+                "preemptions": c["preempt"], "slot_failures": c["fail"],
+                "cancellations": c["cancel"], "steps": self.step_count}
 
     # -- internals ----------------------------------------------------------
 
-    def _release_slot(self, slot: int, ticket: _Ticket) -> None:
+    def _sort_pending(self) -> None:
+        pending = sorted(self.backlog[self._backlog_pos:],
+                         key=lambda t: t.arrival_s)
+        self.backlog[self._backlog_pos:] = pending
+        self._backlog_dirty = False
+
+    @staticmethod
+    def _deliver(done: List[Completion],
+                 on_completion: Optional[Callable[[Completion], None]]
+                 ) -> List[Completion]:
+        if on_completion is not None:
+            for c in done:
+                on_completion(c)
+        return done
+
+    def _emit(self, ticket: _Ticket, tok: int) -> None:
+        """Append a token and stream it to the handle. After a failure
+        re-queue the greedy re-decode re-produces the already-streamed
+        prefix; the handle dedups by index so consumers see each token
+        once."""
+        ticket.emitted.append(tok)
+        if ticket.handle is not None:
+            ticket.handle._emit(len(ticket.emitted) - 1, tok)
+
+    def _finish(self, ticket: _Ticket, reason: str, t0: float) -> Completion:
+        now = time.perf_counter() - t0
+        decode_s = now - ticket.first_token_s if ticket.first_token_s > 0.0 \
+            else 0.0
+        c = Completion(
+            ticket.req.id, ticket.emitted, ticket.prefill_s, decode_s,
+            arrival_s=ticket.arrival_s, first_token_s=ticket.first_token_s,
+            finish_s=now, finish_reason=reason, restarts=ticket.restarts)
+        ticket.where = "done"
+        if ticket.handle is not None:
+            ticket.handle._complete(c)
+        return c
+
+    def _release_slot(self, slot: int) -> None:
         """Return a slot (and, paged, its blocks — exactly once) to the
         free pool, zeroing every host-side mirror so no stale state
         outlives the occupancy."""
         self.free.append(slot)
         self.cache_len[slot] = 0
         self.tokens[slot] = 0
-        if self.sched.paged:
-            if ticket.blocks:
-                self.alloc.free(ticket.blocks)
-                ticket.blocks = []
-            self.block_tables[slot] = 0
+        self.layout.release(slot)
 
     @staticmethod
     def _reset_ticket(ticket: _Ticket) -> None:
@@ -458,16 +792,96 @@ class ContinuousScheduler:
         ticket.first_token_s = 0.0
         ticket.admit_seq = -1
 
-    def _apply_failures(self, t0: float) -> None:
+    def _purge_cancelled(self, t0: float) -> List[Completion]:
+        """Retire every cancelled request at this step boundary: waiting
+        and not-yet-arrived requests complete with no tokens, an active
+        slot or in-flight chunked prefill is released. cancel() itself
+        only flips a flag, so a request cancelled *during* a decode step
+        (from another stream's token callback) is caught before its next
+        token is emitted. O(#cancelled): dispatches over the recorded
+        cancel requests by ticket state, never scanning the waiting set
+        (waiting entries are retired in place in the heap)."""
+        out: List[Completion] = []
+        if not self._cancel_requests:
+            return out
+        requests, self._cancel_requests = self._cancel_requests, []
+        for ticket in requests:
+            if ticket.where == "done":      # raced a finish; nothing to do
+                continue
+            if ticket.where == "backlog":
+                self.backlog.remove(ticket)     # always at index >= cursor
+                out.append(self._cancel_ticket(ticket, t0))
+            elif ticket.where == "queued":
+                ticket.retired = True           # lazy heap deletion
+                self._queue_stale += 1
+                out.append(self._cancel_ticket(ticket, t0))
+            elif ticket.where == "active":
+                out.append(self._evict(ticket.slot, t0, "cancelled",
+                                       kind="cancel"))
+            elif ticket.where == "chunking":
+                st = self._chunking
+                self._chunking = None
+                self._release_slot(st.slot)
+                out.append(self._cancel_ticket(ticket, t0, slot=st.slot))
+        return out
+
+    def _cancel_ticket(self, ticket: _Ticket, t0: float,
+                       slot: int = -1) -> Completion:
+        now = time.perf_counter() - t0
+        self.events.append(SchedEvent(now, "cancel", ticket.req.id, slot,
+                                      self.step_count))
+        return self._finish(ticket, "cancelled", t0)
+
+    def _retire_from_admission(self, ticket: _Ticket,
+                               t0: float) -> Completion:
+        """A cancel issued mid-admission-pass (from an earlier admitted
+        request's token callback) reaches the ticket before the purge
+        does: complete it here so it is never prefilled — the 'not one
+        more token after cancel() returns' contract covers the first
+        token too."""
+        heapq.heappop(self.queue)
+        return self._cancel_ticket(ticket, t0)
+
+    def _requeue_or_fail(self, victims: List[_Ticket],
+                         t0: float) -> List[Completion]:
+        """Post-failure/preemption routing: re-queue (restart from the
+        prompt) while the request has restart budget, else complete as
+        "failed" with the tokens already streamed."""
+        out: List[Completion] = []
+        for ticket in sorted(victims, key=lambda t: t.arrival_s):
+            mr = ticket.req.max_restarts
+            if mr is not None and ticket.restarts >= mr:
+                if ticket.handle is not None:
+                    # after earlier restarts, this attempt's replay may be
+                    # shorter than what was already streamed — the handle
+                    # holds the longest (deduped) history, and "failed"
+                    # reports the tokens streamed before the loss
+                    ticket.emitted = list(ticket.handle.tokens)
+                out.append(self._finish(ticket, "failed", t0))
+                continue
+            ticket.restarts += 1
+            self._reset_ticket(ticket)
+            if ticket.handle is not None and not self.sampler.greedy:
+                # a stochastic re-decode can't replay the streamed prefix
+                # (the key advanced), so the handle's index dedup would
+                # splice two different runs — restart its stream instead
+                ticket.handle._restart()
+            self._enqueue(ticket)
+        return out
+
+    def _apply_failures(self, t0: float) -> List[Completion]:
         """Apply injected slot failures due at the current step boundary:
         every request on a failed slot is *re-queued, not dropped* — its
-        KV state (and paged blocks) is gone, so it goes back to the head
-        of the admission queue (FIFO order preserved) and is re-prefilled
-        from its original prompt. A prompt mid-way through chunked
-        prefill on a failed slot restarts the same way. Greedy decoding
-        makes the re-run deterministic, so its final tokens — and those
-        of every unaffected request, whose slots are untouched — are
-        bit-identical to a failure-free run."""
+        KV state (and paged blocks) is gone, so it goes back into the
+        admission queue (where its original arrival keys it ahead of
+        younger work under FIFO) and is re-prefilled from its original
+        prompt. A prompt mid-way through chunked prefill on a failed slot
+        restarts the same way. Greedy decoding makes the re-run
+        deterministic, so its final tokens — and those of every
+        unaffected request, whose slots are untouched — are bit-identical
+        to a failure-free run. Requests whose ``max_restarts`` budget is
+        exhausted complete as "failed" instead."""
+        out: List[Completion] = []
         while (self._failure_pos < len(self.failures)
                and self.failures[self._failure_pos].step <= self.step_count):
             f = self.failures[self._failure_pos]
@@ -478,49 +892,56 @@ class ContinuousScheduler:
             victims = []
             for slot in slots:
                 ticket = self.active.pop(slot)
-                self._release_slot(slot, ticket)
+                self._release_slot(slot)
                 self.events.append(SchedEvent(now, "fail", ticket.req.id,
                                               slot, self.step_count))
-                self._reset_ticket(ticket)
                 victims.append(ticket)
             st = self._chunking
             if st is not None and (f.slots is None or st.slot in f.slots):
                 self._chunking = None
-                self._release_slot(st.slot, st.ticket)
+                self._release_slot(st.slot)
                 self.events.append(SchedEvent(now, "fail", st.ticket.req.id,
                                               st.slot, self.step_count))
-                self._reset_ticket(st.ticket)
                 victims.append(st.ticket)
-            victims.sort(key=lambda t: t.arrival_s)
-            self.queue.extendleft(reversed(victims))
+            out.extend(self._requeue_or_fail(victims, t0))
+        return out
 
-    def _admit(self, t0: float) -> None:
-        s = self.sched
-        while self.free and self.queue:
-            ticket = self.queue[0]
+    def _admit(self, t0: float) -> List[Completion]:
+        """Admit waiting requests into free slots, in the admission
+        policy's order, until slots or (paged) blocks run out. When the
+        policy's next pick can't be served, admission stops — no head-of-
+        line bypass, so the policy order is also the service order.
+        Returns completions of requests cancelled mid-pass (by an
+        earlier admission's token callback) before they were prefilled."""
+        out: List[Completion] = []
+        while self.free:
+            ticket = self._queue_head()
+            if ticket is None:
+                break
+            if ticket.cancelled:
+                out.append(self._retire_from_admission(ticket, t0))
+                continue
             r = ticket.req
             chunked = self._chunk > 0 and r.embeds is None
             if chunked and self._chunking is not None:
                 break           # one chunked prefill in flight at a time
-            if s.paged:
-                need = max(1, -(-len(r.prompt) // s.block_size))
-                blocks = self.alloc.alloc(need)
-                if blocks is None:
-                    break       # pool exhausted: wait, don't over-commit
-            self.queue.popleft()
+            blocks = self.layout.try_reserve(r)
+            if blocks is None:
+                break           # pool exhausted: wait, don't over-commit
+            heapq.heappop(self.queue)
             slot = self.free.pop()
             ticket.admit_seq = self._admit_seq
             self._admit_seq += 1
-            if s.paged:
-                ticket.blocks = blocks
-                self.block_tables[slot, :len(blocks)] = blocks
+            self.layout.bind(slot, blocks)
             if chunked:
                 ticket.slot = slot
+                ticket.where = "chunking"
                 self._chunking = _ChunkedPrefill(
                     ticket=ticket, slot=slot,
                     cache=T.init_cache(self.cfg, 1, self._scratch_len))
             else:
                 self._admit_one_shot(ticket, slot, t0)
+        return out
 
     def _admit_one_shot(self, ticket: _Ticket, slot: int, t0: float) -> None:
         r = ticket.req
@@ -530,14 +951,9 @@ class ContinuousScheduler:
         tp = time.perf_counter()
         logits, req_cache, clen = jax.block_until_ready(
             self._prefill_fn(self.params, batch))
-        if self.sched.paged:
-            self.cache = self._insert_paged(
-                self.cache, req_cache, jnp.asarray(self.block_tables[slot]),
-                jnp.int32(slot))
-        else:
-            self.cache = self._insert(self.cache, req_cache, jnp.int32(slot))
+        self.layout.insert(req_cache, slot)
         ticket.prefill_s += time.perf_counter() - tp
-        first = int(self._sample(logits)[0])
+        first = int(self.sampler(logits)[0])
         self._activate(ticket, slot, first, int(clen[0]), t0)
 
     def _advance_chunked(self, t0: float) -> None:
@@ -561,22 +977,17 @@ class ContinuousScheduler:
         st.pos += real
         if st.pos < len(r.prompt):
             return
-        if self.sched.paged:
-            self.cache = self._insert_paged(
-                self.cache, st.cache, jnp.asarray(self.block_tables[st.slot]),
-                jnp.int32(st.slot))
-        else:
-            self.cache = self._insert_sliced(self.cache, st.cache,
-                                             jnp.int32(st.slot))
-        first = int(self._sample(logits[:, real - 1])[0])
+        self.layout.insert_scratch(st.cache, st.slot)
+        first = int(self.sampler(logits[:, real - 1])[0])
         self._chunking = None
         self._activate(st.ticket, st.slot, first, len(r.prompt), t0)
 
     def _activate(self, ticket: _Ticket, slot: int, first: int, clen: int,
                   t0: float) -> None:
-        ticket.emitted.append(first)
         ticket.first_token_s = time.perf_counter() - t0
         ticket.slot = slot
+        ticket.where = "active"
+        self._emit(ticket, first)
         self.cache_len[slot] = clen
         self.tokens[slot] = first
         self.active[slot] = ticket
@@ -587,110 +998,109 @@ class ContinuousScheduler:
         return len(ticket.emitted) >= ticket.req.max_new_tokens
 
     def _pick_preempt_victim(self, exclude: int) -> Optional[int]:
-        """Latest-admitted block holder other than ``exclude`` — an
-        in-flight chunked prefill counts (it holds its prompt blocks), so
-        a pool dried out by a half-prefilled prompt can still be
-        reclaimed."""
-        seq = {s: tk.admit_seq for s, tk in self.active.items()}
-        if self._chunking is not None:
-            seq[self._chunking.slot] = self._chunking.ticket.admit_seq
-        seq.pop(exclude, None)
-        if not seq:
+        """Ask the preemption policy for a victim among current block
+        holders other than ``exclude`` — an in-flight chunked prefill
+        counts (it holds its prompt blocks), so a pool dried out by a
+        half-prefilled prompt can still be reclaimed."""
+        cands = [tk for s, tk in self.active.items() if s != exclude]
+        if self._chunking is not None and self._chunking.slot != exclude:
+            cands.append(self._chunking.ticket)
+        if not cands:
             return None
-        return max(seq, key=seq.get)
+        return self.preemption.pick(cands).slot
 
-    def _preempt(self, slot: int, t0: float) -> None:
-        """Evict-and-requeue to reclaim blocks for an older request's
+    def _preempt(self, slot: int, t0: float) -> Optional[Completion]:
+        """Evict-and-requeue to reclaim blocks for another request's
         decode growth: the victim restarts from its prompt (greedy decode
-        makes the re-run bit-identical), back at the queue head."""
+        makes the re-run bit-identical) — or completes as "failed" if its
+        restart budget is spent (the returned Completion)."""
         if self._chunking is not None and self._chunking.slot == slot:
             ticket = self._chunking.ticket
             self._chunking = None
         else:
             ticket = self.active.pop(slot)
-        self._release_slot(slot, ticket)
+        self._release_slot(slot)
         now = time.perf_counter() - t0
         self.events.append(SchedEvent(now, "preempt", ticket.req.id, slot,
                                       self.step_count))
-        self._reset_ticket(ticket)
-        self.queue.appendleft(ticket)
+        out = self._requeue_or_fail([ticket], t0)
+        return out[0] if out else None
 
-    def _grow_blocks(self, t0: float) -> None:
+    def _grow_blocks(self, t0: float) -> List[Completion]:
         """Paged decode growth: before a decode step, every active slot
         whose next KV write position falls in an unallocated page gets one
-        fresh block; admission order wins when the pool runs dry — the
-        latest-admitted other request is preempted to free blocks.
-        Guaranteed to terminate because submit() validates that any single
-        request's worst case fits the pool."""
-        if not self.sched.paged:
-            return
-        bs = self.sched.block_size
+        fresh block; when the pool runs dry the preemption policy picks a
+        victim to evict-and-requeue. Guaranteed to terminate because
+        submit() validates that any single request's worst case fits the
+        pool. Returns completions of victims that ran out of restart
+        budget."""
+        out: List[Completion] = []
+        if not self.layout.paged:
+            return out
         for slot in sorted(self.active,
                            key=lambda s: self.active[s].admit_seq):
             if slot not in self.active:     # preempted earlier this pass
                 continue
-            page = int(self.cache_len[slot]) // bs
-            if self.block_tables[slot, page]:
+            pos = int(self.cache_len[slot])
+            if not self.layout.needs_block(slot, pos):
                 continue
-            blocks = self.alloc.alloc(1)
-            while blocks is None:
+            while not self.layout.grow_one(slot, pos):
                 victim = self._pick_preempt_victim(exclude=slot)
                 if victim is None:
                     raise RuntimeError(
                         f"paged KV pool exhausted growing slot {slot} with "
                         f"no other active request to preempt")
-                self._preempt(victim, t0)
-                blocks = self.alloc.alloc(1)
-            self.block_tables[slot, page] = blocks[0]
-            self.active[slot].blocks.append(blocks[0])
+                c = self._preempt(victim, t0)
+                if c is not None:
+                    out.append(c)
+        return out
 
     def _decode_step(self, t0: float) -> List[Completion]:
         done: List[Completion] = []
         # Requests satisfied by the prefill token alone never decode.
         for slot in [s for s, tk in self.active.items() if self._finished(tk)]:
-            done.append(self._evict(slot, t0))
+            done.append(self._evict(slot, t0, "length"))
         if not self.active:
             return done
-        self._grow_blocks(t0)
-        if self.sched.paged:
-            logits, self.cache, _ = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.asarray(self.cache_len), jnp.asarray(self.block_tables))
-        else:
-            logits, self.cache, _ = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.asarray(self.cache_len))
-        toks = np.asarray(self._sample(logits))
+        done.extend(self._grow_blocks(t0))
+        logits = self.layout.decode(self.params, jnp.asarray(self.tokens),
+                                    jnp.asarray(self.cache_len))
+        toks = np.asarray(self.sampler(logits))
         self.step_count += 1
         for slot in self.active:     # free slots keep cache_len == 0
             self.cache_len[slot] += 1
         for slot, ticket in list(self.active.items()):
+            if ticket.cancelled:
+                # cancelled mid-step by another stream's token callback:
+                # this step's token is dropped, nothing was emitted after
+                # cancel() returned
+                done.append(self._evict(slot, t0, "cancelled",
+                                        kind="cancel"))
+                continue
             t = int(toks[slot])
             if ticket.req.eos is not None and t == ticket.req.eos:
-                done.append(self._evict(slot, t0))
+                done.append(self._evict(slot, t0, "eos"))
                 continue
-            ticket.emitted.append(t)
+            self._emit(ticket, t)
             self.tokens[slot] = t
             if self._finished(ticket):
-                done.append(self._evict(slot, t0))
+                done.append(self._evict(slot, t0, "length"))
         return done
 
-    def _evict(self, slot: int, t0: float) -> Completion:
+    def _evict(self, slot: int, t0: float, reason: str,
+               kind: str = "evict") -> Completion:
         ticket = self.active.pop(slot)
-        self._release_slot(slot, ticket)
+        self._release_slot(slot)
         now = time.perf_counter() - t0
-        self.events.append(SchedEvent(now, "evict", ticket.req.id, slot,
+        self.events.append(SchedEvent(now, kind, ticket.req.id, slot,
                                       self.step_count))
-        return Completion(
-            ticket.req.id, ticket.emitted, ticket.prefill_s,
-            now - ticket.first_token_s, arrival_s=ticket.arrival_s,
-            first_token_s=ticket.first_token_s, finish_s=now)
+        return self._finish(ticket, reason, t0)
 
     def _check_invariants(self) -> None:
         """Step-boundary slot/block accounting (SchedulerConfig(debug=
         True)): a free slot has no residual length/token/table state, and
-        the block pool's books balance — every held block is named by
-        exactly one table entry of exactly one live ticket."""
+        the layout's books balance — every held block is named by exactly
+        one table entry of exactly one occupied slot."""
         free = set(self.free)
         occupied = set(self.active)
         if self._chunking is not None:
@@ -700,21 +1110,4 @@ class ContinuousScheduler:
             if slot in free:
                 assert self.cache_len[slot] == 0, f"slot {slot}: stale len"
                 assert self.tokens[slot] == 0, f"slot {slot}: stale token"
-                if self.sched.paged:
-                    assert not self.block_tables[slot].any(), \
-                        f"slot {slot}: stale block table"
-        if self.sched.paged:
-            self.alloc.check()
-            held_by_tickets: List[int] = []
-            for tk in self.active.values():
-                held_by_tickets.extend(tk.blocks)
-            if self._chunking is not None:
-                held_by_tickets.extend(self._chunking.ticket.blocks)
-            assert len(held_by_tickets) == len(set(held_by_tickets)), \
-                "block owned by two tickets"
-            assert set(held_by_tickets) == self.alloc._held, \
-                (set(held_by_tickets), self.alloc._held)
-            table_entries = self.block_tables[self.block_tables > 0]
-            assert len(table_entries) == len(set(table_entries.tolist())), \
-                "block mapped by two table entries"
-            assert set(table_entries.tolist()) == self.alloc._held
+        self.layout.check(occupied, self.sched.max_slots)

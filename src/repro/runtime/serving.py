@@ -1,54 +1,65 @@
-"""Batched serving engine: static-bucket and continuous-batching modes.
+"""Legacy serving surface: the deprecated ``ServeEngine`` shim plus the
+Edge-PRUNE partitioned engine.
 
-``mode="static-bucket"`` (the seed path) compiles two functions per
-(batch, prompt_len) bucket — ``prefill`` and ``decode_step`` — and
-greedily decodes each bucket until every request hits its max_new_tokens
-or emits ``eos``. Kept as the baseline: it is exactly what the
-decode_32k / long_500k dry-run shapes lower, but every new bucket shape
-recompiles and short requests wait for the longest in their bucket.
+The serving API moved to ``repro.runtime.engine.Engine``: one facade
+configured by a structured ``EngineConfig`` naming pluggable policies
+(admission order, KV layout, preemption, sampler) instead of a
+``mode=...`` kwarg soup. ``ServeEngine`` remains as a thin deprecation
+shim so existing call sites keep working unchanged:
 
-``mode="continuous"`` delegates to ``runtime.scheduler.
-ContinuousScheduler``: one decode function compiled once at a fixed slot
-count, slot-based KV cache reuse, and per-step admission/eviction —
-requests join and leave the running batch between decode steps. Under
-greedy sampling both modes emit identical tokens. ``paged=True`` swaps
-the dense per-slot KV rows for the block-pool layout (``block_size`` /
-``num_blocks``), and ``prefill_chunk=C`` admits prompts C tokens at a
-time interleaved with decode steps — both still token-identical.
+* ``ServeEngine(mode="static-bucket")`` → ``EngineConfig(admission="batch")``
+* ``ServeEngine(mode="continuous")``    → ``EngineConfig(admission="fifo")``
+* ``ServeEngine(paged=True, ...)``      → ``EngineConfig(kv_layout="paged")``
+* ``prefill_chunk`` / ``max_slots`` / sampling kwargs keep their names.
 
-The engine also demonstrates the Edge-PRUNE integration: a ``ServeEngine``
-can be constructed over a *partitioned* model (an actor graph + mapping),
-in which case prefill executes stage-by-stage through the synthesized
-StagedProgram — the collaborative-inference path of the paper.
+The shim reproduces the legacy mode-conditional ``ValueError``s (so
+callers relying on them see identical behavior) and emits a
+``DeprecationWarning`` on construction. It will be removed once the
+examples and benches have no remaining legacy call sites.
+
+``PartitionedServeEngine`` — the paper's collaborative-inference path
+(prefill through a synthesized StagedProgram) — is not deprecated; it
+lives here unchanged.
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Any, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.runtime.scheduler import (Completion, ContinuousScheduler, Request,
-                                     SchedulerConfig, SlotFailure,
-                                     sample_tokens, validate_request_fits)
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.scheduler import (Completion, Request, SlotFailure,
+                                     sample_tokens)
 
 __all__ = ["Request", "Completion", "ServeEngine", "PartitionedServeEngine",
-           "SlotFailure"]
+           "SlotFailure", "Engine", "EngineConfig"]
 
 MODES = ("static-bucket", "continuous")
 
 
 class ServeEngine:
+    """Deprecated: the pre-policy engine facade. Construct an
+    ``Engine`` with an ``EngineConfig`` instead (see module docstring
+    for the kwarg mapping). The shim keeps byte-for-byte output parity:
+    it builds the same Engine the new API would."""
+
     def __init__(self, cfg: ModelConfig, params: Any, *,
                  max_len: int = 512, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
                  mode: str = "static-bucket", max_slots: int = 8,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: int = 0, prefill_chunk: int = 0):
+                 num_blocks: int = 0, prefill_chunk: int = 0,
+                 watermark: int = 0):
+        warnings.warn(
+            "ServeEngine is deprecated; use repro.runtime.engine.Engine "
+            "with EngineConfig (mode='static-bucket' -> admission='batch', "
+            "mode='continuous' -> admission='fifo', paged=True -> "
+            "kv_layout='paged'). See README 'Serving architecture'.",
+            DeprecationWarning, stacklevel=2)
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
         if mode != "continuous" and (paged or prefill_chunk):
@@ -60,94 +71,32 @@ class ServeEngine:
         self.greedy = greedy
         self.temperature = temperature
         self.mode = mode
-        if mode == "continuous":
-            # sampling state lives in the scheduler; keeping a second key
-            # here would be a dead config path
-            self.scheduler = ContinuousScheduler(
-                cfg, params, SchedulerConfig(
-                    max_slots=max_slots, max_len=max_len, greedy=greedy,
-                    temperature=temperature, seed=seed, paged=paged,
-                    block_size=block_size, num_blocks=num_blocks,
-                    prefill_chunk=prefill_chunk))
-        else:
-            self.scheduler = None
-            self.key = jax.random.PRNGKey(seed)
-            self._prefill = jax.jit(
-                lambda p, b: T.prefill(p, cfg, b, max_len=max_len))
-            self._decode = jax.jit(
-                lambda p, tok, cache, clen: T.decode_step(p, cfg, tok, cache,
-                                                          clen))
-
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        toks, self.key = sample_tokens(self.key, logits, greedy=self.greedy,
-                                       temperature=self.temperature)
-        return toks
+        self.engine = Engine(cfg, params, EngineConfig(
+            max_slots=max_slots, max_len=max_len, greedy=greedy,
+            temperature=temperature, seed=seed,
+            kv_layout="paged" if paged else "slotted",
+            block_size=block_size, num_blocks=num_blocks,
+            watermark=watermark, prefill_chunk=prefill_chunk,
+            admission="batch" if mode == "static-bucket" else "fifo"))
+        self.scheduler = self.engine.scheduler
 
     def generate(self, requests: List[Request], *,
                  arrivals: Optional[List[float]] = None,
                  on_completion=None) -> List[Completion]:
-        """Serve ``requests`` to completion. ``arrivals`` (seconds from
-        call time, continuous mode only) submits each request to the
-        admission queue at its arrival instant — an open-loop workload;
-        the static path serves everything as one closed batch.
-        ``on_completion`` (continuous only) streams each completion the
-        moment its request finishes."""
-        if self.mode == "continuous":
-            if arrivals is not None and len(arrivals) != len(requests):
-                raise ValueError(
-                    f"arrivals has {len(arrivals)} entries for "
-                    f"{len(requests)} requests")
-            for i, r in enumerate(requests):
-                self.scheduler.submit(r, arrivals[i] if arrivals else 0.0)
-            return self.scheduler.run(on_completion)
-        if arrivals is not None:
-            raise ValueError("arrivals requires mode='continuous' — the "
-                             "static-bucket path has no admission queue")
-        if on_completion is not None:
-            raise ValueError("on_completion requires mode='continuous' — "
-                             "the static path completes buckets, not a "
-                             "stream")
-        for r in requests:
-            validate_request_fits(self.cfg, r, self.max_len)
-        out: List[Completion] = []
-        # bucket by prompt length
-        buckets: Dict[int, List[Request]] = {}
-        for r in requests:
-            buckets.setdefault(len(r.prompt), []).append(r)
-        for plen, reqs in sorted(buckets.items()):
-            out.extend(self._run_bucket(plen, reqs))
-        return sorted(out, key=lambda c: c.id)
-
-    def _run_bucket(self, plen: int, reqs: List[Request]) -> List[Completion]:
-        b = len(reqs)
-        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]))}
-        if reqs[0].embeds is not None:
-            batch["embeds"] = jnp.asarray(np.stack([r.embeds for r in reqs]))
-        t0 = time.perf_counter()
-        logits, cache, clen = jax.block_until_ready(
-            self._prefill(self.params, batch))
-        t1 = time.perf_counter()
-        max_new = max(r.max_new_tokens for r in reqs)
-        toks = self._sample(logits)
-        emitted = [[int(t)] for t in np.asarray(toks)]
-        done = np.zeros(b, bool)
-        for _ in range(max_new - 1):
-            logits, cache, clen = self._decode(self.params, toks, cache, clen)
-            toks = self._sample(logits)
-            for i, t in enumerate(np.asarray(toks)):
-                if not done[i]:
-                    if reqs[i].eos is not None and t == reqs[i].eos:
-                        done[i] = True
-                    elif len(emitted[i]) < reqs[i].max_new_tokens:
-                        emitted[i].append(int(t))
-                    else:
-                        done[i] = True
-            if done.all():
-                break
-        jax.block_until_ready(toks)
-        t2 = time.perf_counter()
-        return [Completion(r.id, emitted[i], t1 - t0, t2 - t1)
-                for i, r in enumerate(reqs)]
+        """Serve ``requests`` to completion (legacy signature; delegates
+        to ``Engine.generate``). The legacy mode-conditional errors are
+        preserved verbatim."""
+        if self.mode != "continuous":
+            if arrivals is not None:
+                raise ValueError("arrivals requires mode='continuous' — the "
+                                 "static-bucket path has no admission queue")
+            if on_completion is not None:
+                raise ValueError("on_completion requires mode='continuous' — "
+                                 "the static path completes buckets, not a "
+                                 "stream")
+            return self.engine.generate(requests)
+        return self.engine.generate(requests, arrivals=arrivals,
+                                    on_completion=on_completion)
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +117,7 @@ class PartitionedServeEngine:
         self.program = synthesize(self.graph, mapping)
 
     def infer(self, tokens: np.ndarray) -> jax.Array:
-        sinks = self.program.run_local({"Input": jnp.asarray(tokens)})
+        sinks = self.program.run_local({"Input": jax.numpy.asarray(tokens)})
         return sinks["Head"]
 
     def infer_pipelined(self, token_frames: List[np.ndarray], *,
@@ -176,7 +125,7 @@ class PartitionedServeEngine:
         """Serve a stream of frames through the staged pipeline: stage k
         of frame i overlaps stage k-1 of frame i+1 on the modeled
         per-unit clocks. Returns (logits per frame, PipelineSchedule)."""
-        frames = [{"Input": jnp.asarray(t)} for t in token_frames]
+        frames = [{"Input": jax.numpy.asarray(t)} for t in token_frames]
         sinks, sched = self.program.run_pipelined(frames, platform=platform,
                                                   arrivals=arrivals)
         return [s["Head"] for s in sinks], sched

@@ -1,0 +1,592 @@
+"""Unified-Engine API + request-lifecycle tests.
+
+* policy objects in isolation — admission orders (FIFO / priority /
+  EDF), preemption victim selection, static bucketing — exercised with
+  plain records, no JAX;
+* the ``Engine`` facade — every admission/layout combination emits the
+  static path's exact greedy tokens; policy order is observable in the
+  admission event trace;
+* the request lifecycle — ``RequestHandle.cancel()`` (queued, active,
+  from inside a token callback: never a token after cancel() returns),
+  per-token streaming (callback and pull iterator), ``finish_reason``
+  on every path (eos / length / cancelled / failed), restart accounting
+  under ``SlotFailure``;
+* the paged admission watermark — damps growth preemptions without
+  changing tokens;
+* the legacy ``ServeEngine`` shim — warns, and produces byte-identical
+  output through the new facade;
+* a hypothesis property: ANY interleaving of submit / cancel / priority
+  / deadline / failure events leaks no slots or blocks, and a cancelled
+  request never emits a token after ``cancel()`` returns.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.policies import (BatchAdmission, DeadlineAdmission,
+                                    EvictLatest, FifoAdmission,
+                                    LowestPriority, PriorityAdmission,
+                                    make_admission, make_preemption)
+from repro.runtime.scheduler import Request, SlotFailure
+from repro.runtime.serving import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(cfg, KEY)
+
+
+def _mixed_requests(cfg, specs, seed=0, **req_kw):
+    rng = np.random.RandomState(seed)
+    return [Request(i, rng.randint(0, cfg.vocab_size, plen).astype(np.int32),
+                    max_new_tokens=mnew, **req_kw)
+            for i, (plen, mnew) in enumerate(specs)]
+
+
+MIXED_SPECS = [(8, 6), (12, 4), (8, 9), (5, 1), (12, 7), (16, 5)]
+
+
+# ---------------------------------------------------------------------------
+# policies in isolation (no JAX, no model)
+# ---------------------------------------------------------------------------
+
+def _ticket(seq, arrival=0.0, priority=0, deadline=None, admit=-1):
+    return SimpleNamespace(
+        req=SimpleNamespace(priority=priority, deadline_s=deadline),
+        arrival_s=arrival, submit_seq=seq, admit_seq=admit)
+
+
+def test_admission_policy_orders():
+    ts = [_ticket(0, arrival=0.2), _ticket(1, arrival=0.1),
+          _ticket(2, arrival=0.1, priority=3),
+          _ticket(3, arrival=0.3, priority=9, deadline=0.05),
+          _ticket(4, arrival=0.0, deadline=0.2)]
+
+    def order(policy):
+        return [t.submit_seq for t in sorted(ts, key=policy.key)]
+
+    # FIFO: arrival, then submission order
+    assert order(FifoAdmission()) == [4, 1, 2, 0, 3]
+    # priority: 9 > 3 > 0s (FIFO within level)
+    assert order(PriorityAdmission()) == [3, 2, 4, 1, 0]
+    # EDF: absolute due = arrival + deadline; no deadline sorts last
+    assert order(DeadlineAdmission()) == [4, 3, 1, 2, 0]
+
+
+def test_preemption_policy_picks():
+    cands = [_ticket(0, priority=2, admit=0), _ticket(1, priority=0, admit=1),
+             _ticket(2, priority=0, admit=2), _ticket(3, priority=5, admit=3)]
+    assert EvictLatest().pick(cands).submit_seq == 3
+    # lowest priority; latest-admitted among equals
+    assert LowestPriority().pick(cands).submit_seq == 2
+
+
+def test_batch_admission_buckets():
+    reqs = [SimpleNamespace(prompt=np.zeros(n)) for n in (8, 4, 8, 2)]
+    got = BatchAdmission().buckets(reqs)
+    assert [(plen, [len(r.prompt) for r in rs]) for plen, rs in got] == \
+        [(2, [2]), (4, [4]), (8, [8, 8])]
+
+
+def test_policy_factories():
+    assert isinstance(make_admission("edf"), DeadlineAdmission)
+    assert isinstance(make_admission("static-bucket"), BatchAdmission)
+    assert isinstance(make_preemption("lowest-priority"), LowestPriority)
+    fifo = FifoAdmission()
+    assert make_admission(fifo) is fifo          # instance passthrough
+    with pytest.raises(ValueError, match="admission policy"):
+        make_admission("lifo")
+    with pytest.raises(ValueError, match="preemption policy"):
+        make_preemption("oldest")
+
+
+# ---------------------------------------------------------------------------
+# Engine facade: configuration matrix stays token-identical to batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(admission="priority"),
+    dict(admission="edf", kv_layout="paged", block_size=8),
+    dict(admission="priority", kv_layout="paged", block_size=4,
+         num_blocks=16, preemption="lowest-priority", prefill_chunk=4),
+], ids=["priority", "edf-paged", "priority-paged-chunked-tight"])
+def test_policy_matrix_matches_batch_tokens(setup, kw):
+    """Admission/preemption policies move waiting time, never content:
+    every combination must emit the static-bucket executor's exact
+    greedy tokens (priorities and deadlines drawn adversarially)."""
+    cfg, params = setup
+    static = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
+    ref = static.generate(_mixed_requests(cfg, MIXED_SPECS))
+    reqs = _mixed_requests(cfg, MIXED_SPECS)
+    for i, r in enumerate(reqs):        # adversarial policy inputs
+        r.priority = (i * 7) % 3
+        r.deadline_s = None if i % 3 == 0 else 0.01 * ((i * 5) % 4)
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=3,
+                                           debug=True, **kw))
+    outs = eng.generate(reqs)
+    assert [c.id for c in outs] == [c.id for c in ref]
+    for a, b in zip(ref, outs):
+        assert b.tokens == a.tokens, f"request {a.id} diverged"
+    assert all(c.finish_reason == "length" for c in outs)
+
+
+def test_priority_admission_order_is_observable(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1,
+                                           admission="priority"))
+    reqs = _mixed_requests(cfg, [(8, 3)] * 4)
+    reqs[2].priority = 5
+    reqs[3].priority = 1
+    eng.generate(reqs)
+    admits = [e.request_id for e in eng.scheduler.events if e.kind == "admit"]
+    assert admits == [2, 3, 0, 1]
+
+
+def test_edf_admission_order_is_observable(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1,
+                                           admission="edf"))
+    reqs = _mixed_requests(cfg, [(8, 3)] * 3)
+    reqs[0].deadline_s = None                   # background: last
+    reqs[1].deadline_s = 0.2
+    reqs[2].deadline_s = 0.1
+    eng.generate(reqs)
+    admits = [e.request_id for e in eng.scheduler.events if e.kind == "admit"]
+    assert admits == [2, 1, 0]
+
+
+def test_engine_config_rejected_combinations(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="batch admission"):
+        Engine(cfg, params, EngineConfig(admission="batch",
+                                         kv_layout="paged"))
+    with pytest.raises(ValueError, match="kv_layout"):
+        Engine(cfg, params, EngineConfig(kv_layout="blocked"))
+    with pytest.raises(ValueError, match="arrivals"):
+        Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+            .generate(_mixed_requests(cfg, [(8, 2)]), arrivals=[0.0])
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle: cancellation, streaming, finish reasons
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_request_never_runs(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1))
+    reqs = _mixed_requests(cfg, [(8, 4), (8, 4)])
+    eng.submit(reqs[0])
+    h = eng.submit(reqs[1])
+    h.cancel()
+    outs = eng.run()
+    assert h.finish_reason == "cancelled" and h.tokens == []
+    byid = {c.id: c for c in outs}
+    assert byid[1].finish_reason == "cancelled" and byid[1].tokens == []
+    assert byid[0].finish_reason == "length" and len(byid[0].tokens) == 4
+    # the cancelled request never occupied a slot
+    assert 1 not in [e.request_id for e in eng.scheduler.events
+                     if e.kind == "admit"]
+
+
+def test_cancel_unarrived_request_skips_idle_wait(setup):
+    """Cancelling a far-future arrival must retire it from the backlog —
+    the drain returns immediately instead of sleeping to its arrival."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1))
+    h = eng.submit(_mixed_requests(cfg, [(8, 4)])[0], arrival_s=9999.0)
+    h.cancel()
+    outs = eng.run()
+    assert [c.finish_reason for c in outs] == ["cancelled"]
+
+
+def test_cancel_from_token_callback_stops_stream(setup):
+    """The contract: once cancel() returns, not one more token. Cancel is
+    issued from inside the request's own on_token callback mid-decode."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=2))
+    reqs = _mixed_requests(cfg, [(8, 12), (8, 12)])
+    h0, h1 = eng.submit(reqs[0]), eng.submit(reqs[1])
+    at_cancel = []
+
+    @h0.on_token
+    def _(tok):
+        if len(h0.tokens) == 3:
+            h0.cancel()
+            at_cancel.append(list(h0.tokens))
+    outs = eng.run()
+    assert h0.finish_reason == "cancelled"
+    assert h0.tokens == at_cancel[0] == h0.completion.tokens
+    assert len(h0.tokens) == 3
+    # the co-batched stream is unaffected
+    assert h1.finish_reason == "length" and len(h1.tokens) == 12
+    kinds = {e.request_id: [x.kind for x in eng.scheduler.events
+                            if x.request_id == e.request_id]
+             for e in eng.scheduler.events}
+    assert kinds[0] == ["admit", "cancel"]
+
+
+def test_cancel_from_other_streams_callback_blocks_admission(setup):
+    """A cancel issued mid-admission-pass — from an earlier admission's
+    first-token callback — must keep the victim from ever being
+    prefilled: the no-token-after-cancel contract covers token zero."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=2))
+    reqs = _mixed_requests(cfg, [(8, 4), (8, 4)])
+    h0 = eng.submit(reqs[0])
+    h1 = eng.submit(reqs[1])
+    h0.on_token(lambda tok: h1.cancel())
+    outs = eng.run()
+    byid = {c.id: c for c in outs}
+    assert byid[1].finish_reason == "cancelled" and h1.tokens == []
+    assert 1 not in [e.request_id for e in eng.scheduler.events
+                     if e.kind == "admit"]
+    assert byid[0].finish_reason == "length" and len(h0.tokens) == 4
+
+
+def test_step_driven_drain_after_idle_gap_rebases_epoch(setup):
+    """A fresh submission after a completed drain starts a fresh arrival
+    epoch on the step-driven path too: the idle wall-clock gap must not
+    leak into the new request's TTFT/latency."""
+    import time as _time
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1))
+    eng.submit(_mixed_requests(cfg, [(8, 2)])[0])
+    eng.run()
+    _time.sleep(1.0)                        # idle gap between drains
+    h = eng.submit(_mixed_requests(cfg, [(8, 2)])[0])
+    c = h.result()                          # step-driven, no run() call
+    assert 0.0 <= c.ttft_s < 0.5 and c.latency_s < 0.5
+
+
+def test_cancel_is_idempotent_and_noop_after_completion(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1))
+    h = eng.submit(_mixed_requests(cfg, [(8, 3)])[0])
+    outs = eng.run()
+    assert h.finish_reason == "length"
+    h.cancel()                              # completed: must be a no-op
+    h.cancel()
+    assert h.finish_reason == "length" and len(h.tokens) == 3
+    assert outs[0].tokens == h.tokens
+
+
+def test_stream_iterator_and_result(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=2))
+    reqs = _mixed_requests(cfg, [(8, 5), (12, 7)])
+    h0, h1 = eng.submit(reqs[0]), eng.submit(reqs[1])
+    streamed = list(h0.stream())            # pull-driven: advances engine
+    assert streamed == h0.completion.tokens and len(streamed) == 5
+    c1 = h1.result()                        # drives the rest of the drain
+    assert c1.finish_reason == "length" and len(c1.tokens) == 7
+    assert eng.scheduler.done
+
+
+def test_stream_then_run_keeps_timeline_coherent(setup):
+    """Mixing the step-driven API with a closing run() must not rebase
+    the engine clock: in-flight timestamps stay on one epoch, so no
+    completion reports a negative decode span or finish < first-token."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=2))
+    h = eng.submit(_mixed_requests(cfg, [(8, 6)])[0])
+    next(h.stream())                        # step-driven first token
+    outs = eng.run()
+    assert outs[0].decode_s >= 0.0
+    assert outs[0].finish_s >= outs[0].first_token_s >= 0.0
+
+
+def test_batch_double_submit_same_request_object(setup):
+    """Submitting the same Request object twice through batch admission
+    must complete both handles (no identity-keyed dedup)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
+    (req,) = _mixed_requests(cfg, [(8, 4)])
+    h1, h2 = eng.submit(req), eng.submit(req)
+    outs = eng.run()
+    assert len(outs) == 2 and h1.done and h2.done
+    assert h1.tokens == h2.tokens and len(h1.tokens) == 4
+
+
+def test_finish_reason_eos_vs_length_continuous_and_static(setup):
+    """The satellite backfill: eos-stop and length-stop are no longer
+    conflated, and both executors agree on every request."""
+    cfg, params = setup
+    specs = [(8, 12), (10, 12), (6, 12)]
+    probe = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+        .generate(_mixed_requests(cfg, specs))
+    eos = probe[0].tokens[3]                # occurs mid-stream for req 0
+    reqs = _mixed_requests(cfg, specs, eos=eos)
+    static = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+        .generate(reqs)
+    cont = Engine(cfg, params, EngineConfig(max_len=64, max_slots=2)) \
+        .generate(_mixed_requests(cfg, specs, eos=eos))
+    assert [c.tokens for c in cont] == [c.tokens for c in static]
+    assert [c.finish_reason for c in cont] == \
+        [c.finish_reason for c in static]
+    assert static[0].finish_reason == "eos" and len(static[0].tokens) < 12
+    assert "length" in {c.finish_reason for c in static}
+
+
+def test_slot_failure_restart_accounting_and_failed_reason(setup):
+    """SlotFailure-requeued requests surface how they ended: restart
+    count on success, finish_reason='failed' (tokens truncated at the
+    failure point) once max_restarts is exhausted."""
+    cfg, params = setup
+    spec = [(8, 8)]
+    ref = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+        .generate(_mixed_requests(cfg, spec))
+    retried = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1),
+                     failures=[SlotFailure(step=2, slots=(0,))]) \
+        .generate(_mixed_requests(cfg, spec))
+    assert retried[0].tokens == ref[0].tokens
+    assert retried[0].finish_reason == "length"
+    assert retried[0].restarts == 1
+    failed = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1),
+                    failures=[SlotFailure(step=2, slots=(0,))]) \
+        .generate(_mixed_requests(cfg, spec, max_restarts=0))
+    assert failed[0].finish_reason == "failed"
+    assert failed[0].restarts == 0
+    # the tokens streamed before the failure are reported, nothing more
+    assert failed[0].tokens == ref[0].tokens[:len(failed[0].tokens)]
+    assert len(failed[0].tokens) < len(ref[0].tokens)
+
+
+def test_failed_after_multiple_restarts_reports_streamed_history(setup):
+    """A terminal failure after earlier restarts must report the longest
+    streamed history, not the final attempt's shorter replay — the
+    completion and the handle's stream must agree."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=1),
+                 failures=[SlotFailure(step=2, slots=(0,)),
+                           SlotFailure(step=3, slots=(0,))])
+    h = eng.submit(_mixed_requests(cfg, [(8, 8)], max_restarts=1)[0])
+    (out,) = eng.run()
+    assert out.finish_reason == "failed" and out.restarts == 1
+    assert out.tokens == h.tokens
+    assert 1 <= len(out.tokens) < 8
+
+
+def test_static_cancel_before_and_during_bucket(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
+    reqs = _mixed_requests(cfg, [(8, 8), (8, 8), (8, 8)])
+    h0, h1, h2 = (eng.submit(r) for r in reqs)
+    h0.cancel()                             # before the bucket runs
+
+    @h1.on_token
+    def _(tok):
+        if len(h1.tokens) == 2:
+            h1.cancel()
+    outs = eng.run()
+    byid = {c.id: c for c in outs}
+    assert byid[0].finish_reason == "cancelled" and byid[0].tokens == []
+    assert byid[1].finish_reason == "cancelled" and len(byid[1].tokens) == 2
+    assert byid[2].finish_reason == "length" and len(byid[2].tokens) == 8
+
+
+# ---------------------------------------------------------------------------
+# paged admission watermark
+# ---------------------------------------------------------------------------
+
+def test_watermark_damps_growth_preemption(setup):
+    """Holding back free blocks at admission leaves growth headroom for
+    the running requests: strictly fewer (here: zero) growth preemptions
+    on an oversubscribed pool, with tokens unchanged."""
+    cfg, params = setup
+    preempts = {}
+    outs = {}
+    for wm in (0, 3):
+        eng = Engine(cfg, params, EngineConfig(
+            max_len=64, max_slots=4, kv_layout="paged", block_size=4,
+            num_blocks=16, watermark=wm, debug=True))
+        outs[wm] = eng.generate(_mixed_requests(cfg, MIXED_SPECS))
+        preempts[wm] = eng.stats()["preemptions"]
+        assert eng.scheduler.alloc.in_use == 0
+    assert preempts[0] > 0, "workload must thrash without a watermark"
+    assert preempts[3] < preempts[0]
+    assert [c.tokens for c in outs[0]] == [c.tokens for c in outs[3]]
+
+
+def test_watermark_never_blocks_a_servable_request(setup):
+    cfg, params = setup
+    # capacity 7, watermark 5 leaves 2 admissible blocks. A 2-block
+    # prompt that grows to 3 blocks IS servable: admission needs
+    # prompt + watermark free, growth bypasses the watermark.
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=32, max_slots=2, kv_layout="paged", block_size=4,
+        num_blocks=8, watermark=5, debug=True))
+    rng = np.random.RandomState(0)
+    (out,) = eng.generate([Request(0, rng.randint(0, cfg.vocab_size, 8)
+                                   .astype(np.int32), max_new_tokens=4)])
+    assert len(out.tokens) == 4 and eng.scheduler.alloc.in_use == 0
+    # a 3-block prompt can never clear admission with 5 held back
+    with pytest.raises(ValueError, match="watermark"):
+        eng.submit(Request(1, np.zeros(12, np.int32), max_new_tokens=2))
+    # and a worst case beyond the whole pool is rejected regardless
+    with pytest.raises(ValueError, match="worst-case"):
+        eng.submit(Request(2, np.zeros(8, np.int32), max_new_tokens=24))
+    with pytest.raises(ValueError, match="watermark"):
+        Engine(cfg, params, EngineConfig(
+            kv_layout="paged", block_size=4, num_blocks=8, watermark=7))
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_shim_warns_and_matches(setup):
+    cfg, params = setup
+    reqs = _mixed_requests(cfg, MIXED_SPECS)
+    ref = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+        .generate(reqs)
+    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
+        legacy = ServeEngine(cfg, params, max_len=64)
+    assert [c.tokens for c in legacy.generate(reqs)] == \
+        [c.tokens for c in ref]
+    with pytest.warns(DeprecationWarning):
+        cont = ServeEngine(cfg, params, max_len=64, mode="continuous",
+                           max_slots=2, paged=True, block_size=8)
+    assert [c.tokens for c in cont.generate(reqs)] == \
+        [c.tokens for c in ref]
+    # legacy mode-conditional errors are preserved
+    with pytest.warns(DeprecationWarning):
+        static = ServeEngine(cfg, params, max_len=64)
+    with pytest.raises(ValueError, match="arrivals requires"):
+        static.generate(reqs, arrivals=[0.0] * len(reqs))
+    with pytest.raises(ValueError, match="on_completion requires"):
+        static.generate(reqs, on_completion=lambda c: None)
+    with pytest.raises(ValueError, match="mode"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(cfg, params, mode="bogus")
+    with pytest.raises(ValueError, match="continuous"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(cfg, params, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# property: arbitrary lifecycle interleavings leak nothing
+# ---------------------------------------------------------------------------
+
+CFG = _tiny_cfg()
+PARAMS = T.init_params(CFG, KEY)
+PROMPT_LENS = (4, 6, 8)
+
+
+def test_property_lifecycle_interleavings():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (see "
+        "requirements-dev.txt); the fast lane skips them")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data())
+    def inner(data):
+        """Random workloads mixing priorities, deadlines, cancellations
+        (immediate and at a drawn token index, issued from inside the
+        token callback) and SlotFailure injections, over a drawn
+        layout/admission combination: every request gets exactly one
+        completion with a legal finish_reason, a cancelled request's
+        token stream is frozen the moment cancel() returns, and no slot
+        or block outlives the drain."""
+        rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16),
+                                              label="seed"))
+        n_req = data.draw(st.integers(2, 6), label="n_req")
+        max_slots = data.draw(st.integers(1, 3), label="max_slots")
+        paged = data.draw(st.booleans(), label="paged")
+        admission = data.draw(st.sampled_from(["fifo", "priority", "edf"]),
+                              label="admission")
+        kw = {}
+        if paged:
+            # the workload's worst case is 4 blocks (8 + 6 - 1 rows);
+            # the watermark shrinks admissible capacity, so size the
+            # pool to keep every drawn request servable
+            wm = data.draw(st.integers(0, 1), label="watermark")
+            kw = dict(kv_layout="paged", block_size=4,
+                      num_blocks=data.draw(st.integers(5 + wm, 13),
+                                           label="num_blocks"),
+                      watermark=wm,
+                      preemption=data.draw(st.sampled_from(
+                          ["evict-latest", "lowest-priority"]),
+                          label="preemption"),
+                      prefill_chunk=data.draw(st.sampled_from([0, 4]),
+                                              label="chunk"))
+        n_fail = data.draw(st.integers(0, 2), label="n_fail")
+        failures = [SlotFailure(step=data.draw(st.integers(0, 20),
+                                               label=f"fail_step{i}"),
+                                slots=data.draw(st.sampled_from(
+                                    [None, (0,), (0, 1)]),
+                                    label=f"fail_slots{i}"))
+                    for i in range(n_fail)]
+        eng = Engine(CFG, PARAMS, EngineConfig(
+            max_len=16, max_slots=max_slots, admission=admission,
+            debug=True, **kw), failures=failures)
+        handles = []
+        frozen = {}                      # id -> tokens at cancel() return
+        for i in range(n_req):
+            req = Request(
+                i, rng.randint(0, CFG.vocab_size,
+                               PROMPT_LENS[i % len(PROMPT_LENS)]
+                               ).astype(np.int32),
+                max_new_tokens=int(rng.randint(1, 7)),
+                priority=int(rng.randint(0, 3)),
+                deadline_s=None if rng.rand() < 0.5
+                else float(rng.rand() * 0.2),
+                max_restarts=data.draw(st.sampled_from([None, 0, 2]),
+                                       label=f"max_restarts{i}"))
+            h = eng.submit(req)
+            cancel_at = data.draw(
+                st.sampled_from([None, 0, 1, 3]), label=f"cancel_at{i}")
+            if cancel_at == 0:
+                h.cancel()
+                frozen[i] = list(h.tokens)
+            elif cancel_at is not None:
+                def make_cb(h=h, at=cancel_at, i=i):
+                    def cb(tok):
+                        if len(h.tokens) >= at and i not in frozen:
+                            h.cancel()
+                            frozen[i] = list(h.tokens)
+                    return cb
+                h.on_token(make_cb())
+            handles.append(h)
+        outs = eng.run()
+        assert sorted(c.id for c in outs) == list(range(n_req)), \
+            "request lost or duplicated"
+        for h, c in zip(handles, sorted(outs, key=lambda c: c.id)):
+            assert c.finish_reason in ("eos", "length", "cancelled",
+                                       "failed")
+            assert h.completion is c
+            if c.finish_reason == "cancelled":
+                assert h.tokens == frozen[c.id], \
+                    "token emitted after cancel() returned"
+            elif c.finish_reason == "length":
+                assert len(c.tokens) == h.request.max_new_tokens
+            elif c.finish_reason == "failed":
+                assert h.request.max_restarts is not None
+                assert c.restarts <= h.request.max_restarts
+        sched = eng.scheduler
+        assert sched.done
+        assert sorted(sched.free) == list(range(max_slots)), "slot leak"
+        assert not sched.cache_len.any() and not sched.tokens.any()
+        if paged:
+            assert sched.alloc.in_use == 0, "leaked blocks"
+            assert sched.alloc.available == sched.alloc.capacity
+            assert not sched.block_tables.any()
+
+    inner()
