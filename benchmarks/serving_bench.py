@@ -24,10 +24,18 @@ pool/high-water KV bytes vs the dense slotted reservation, TTFT p50/p99
 for both, and the growth-preemption count under the admission
 ``--watermark`` (0 = no headroom reserved).
 
+``--prefix-cache`` measures paged prefix sharing on a *shared-prefix*
+Poisson trace (every prompt opens with the same preamble — the
+edge-serving pattern where many endpoint clients reuse one task header):
+the same trace runs with sharing off and on, asserting identical greedy
+tokens, >= 30% of prompt tokens skipping prefill, and a lower pool
+high-water mark; reports prefill tokens saved, pool high-water and TTFT
+p50/p99 for both.
+
 ``python benchmarks/serving_bench.py --tiny --out smoke.json`` is the CI
-bench-smoke entrypoint (``--paged --tiny`` is the paged smoke; also
-runnable via ``python -m benchmarks.run --only serving`` for the full
-size).
+bench-smoke entrypoint (``--paged --prefix-cache --tiny`` is the paged
+smoke; also runnable via ``python -m benchmarks.run --only serving`` for
+the full size).
 """
 from __future__ import annotations
 
@@ -173,9 +181,82 @@ def _paged_rows(cfg, params, reqs, arrivals, *, max_len: int, slots: int,
     ]
 
 
+def _shared_prefix_requests(cfg: ModelConfig, n: int, max_new: int, *,
+                            prefix_len: int, seed: int = 3) -> List[Request]:
+    """The edge-serving traffic shape: every prompt opens with the same
+    ``prefix_len``-token preamble (task instructions / few-shot header),
+    followed by a per-request tail of varying length."""
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    tails = (8, 16, 24, 32)
+    return [Request(i, np.concatenate([
+                shared, rng.randint(0, cfg.vocab_size,
+                                    tails[i % len(tails)]).astype(np.int32)]),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _prefix_rows(cfg, params, *, max_len: int, slots: int, n: int,
+                 max_new: int, rate: float, seed: int) -> List[Row]:
+    """Prefix sharing on vs off over the same shared-prefix Poisson
+    trace. Asserts the headline properties: identical greedy tokens,
+    >= 30% of prompt tokens skipping prefill, and a lower paged-pool
+    high-water mark (shared chains are resident once, not per slot)."""
+    prefix_len = 48
+    reqs = _shared_prefix_requests(cfg, n, max_new, prefix_len=prefix_len)
+    # arrive fast relative to service so shared chains stay resident
+    arrivals = _poisson_arrivals(n, rate_per_s=max(rate, 200.0), seed=seed)
+    runs = {}
+    for on in (False, True):
+        eng = Engine(cfg, params, EngineConfig(
+            max_len=max_len, max_slots=slots, kv_layout="paged",
+            block_size=16, prefix_cache=on))
+        eng.generate(reqs)              # warmup (compiles), closed loop
+        eng.scheduler.alloc.reset_hwm()
+        base = eng.stats()
+        o = _measure(eng, reqs, arrivals)
+        st = eng.stats()
+        runs[on] = {
+            "outs": o["outs"],
+            "hwm": eng.kv_stats()["paged_kv_hwm_blocks"],
+            "saved": st["prefill_tokens_saved"] - base["prefill_tokens_saved"],
+            "total": st["prefill_tokens_total"] - base["prefill_tokens_total"],
+            "hits": st["prefix_hits"] - base["prefix_hits"],
+            "ttft": [x.ttft_s for x in o["outs"]],
+        }
+    assert [c.tokens for c in runs[True]["outs"]] == \
+        [c.tokens for c in runs[False]["outs"]], \
+        "prefix sharing changed greedy tokens"
+    saved_frac = runs[True]["saved"] / max(runs[True]["total"], 1)
+    assert saved_frac >= 0.30, \
+        (f"shared-prefix trace must skip >= 30% of prefill tokens, got "
+         f"{saved_frac:.1%} ({runs[True]['saved']}/{runs[True]['total']})")
+    assert runs[True]["hwm"] < runs[False]["hwm"], \
+        (f"prefix sharing must lower the pool high-water mark: "
+         f"{runs[True]['hwm']:.0f} vs {runs[False]['hwm']:.0f} blocks")
+    return [
+        Row("serving", "prefix_shared_prompt_tokens", float(prefix_len),
+            "tok"),
+        Row("serving", "prefix_prefill_tokens_saved",
+            float(runs[True]["saved"]), "tok"),
+        Row("serving", "prefix_prefill_tokens_saved_frac", saved_frac, "x"),
+        Row("serving", "prefix_hits", float(runs[True]["hits"]), "req"),
+        Row("serving", "prefix_on_kv_hwm_blocks", runs[True]["hwm"], "blk"),
+        Row("serving", "prefix_off_kv_hwm_blocks", runs[False]["hwm"], "blk"),
+        Row("serving", "prefix_on_ttft_p50_ms",
+            float(np.percentile(runs[True]["ttft"], 50)) * 1e3, "ms"),
+        Row("serving", "prefix_on_ttft_p99_ms",
+            float(np.percentile(runs[True]["ttft"], 99)) * 1e3, "ms"),
+        Row("serving", "prefix_off_ttft_p50_ms",
+            float(np.percentile(runs[False]["ttft"], 50)) * 1e3, "ms"),
+        Row("serving", "prefix_off_ttft_p99_ms",
+            float(np.percentile(runs[False]["ttft"], 99)) * 1e3, "ms"),
+    ]
+
+
 def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         max_new: Optional[int] = None, rate: float = 200.0,
-        seed: int = 1, paged: bool = False, watermark: int = 0) -> List[Row]:
+        seed: int = 1, paged: bool = False, watermark: int = 0,
+        prefix_cache: bool = False) -> List[Row]:
     cfg = _cfg(tiny)
     n = n_requests or (8 if tiny else 16)
     new = max_new or (8 if tiny else 32)
@@ -220,6 +301,9 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         rows += _paged_rows(cfg, params, reqs, arrivals, max_len=max_len,
                             slots=slots, watermark=watermark,
                             slotted_outs=o["outs"])
+    if prefix_cache:
+        rows += _prefix_rows(cfg, params, max_len=max_len, slots=slots,
+                             n=n, max_new=new, rate=rate, seed=seed)
 
     # continuous+pipelined: prefill stream through a 2-unit StagedProgram
     # on the paper's N2/i7 WiFi platform (overlapping link), modeled clocks.
@@ -275,12 +359,18 @@ def main() -> None:
                     help="paged admission watermark in blocks (growth "
                          "headroom held back at admission; see "
                          "EngineConfig.watermark)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="also measure paged prefix sharing (copy-on-"
+                         "write) on a shared-prefix Poisson trace: "
+                         "prefill tokens saved, pool high-water and TTFT "
+                         "vs sharing off")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()
     rows = run(tiny=args.tiny, n_requests=args.requests,
                max_new=args.max_new, rate=args.rate, seed=args.seed,
-               paged=args.paged, watermark=args.watermark)
+               paged=args.paged, watermark=args.watermark,
+               prefix_cache=args.prefix_cache)
     print(HEADER)
     emit(rows, out_path=args.out)
 

@@ -107,6 +107,11 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: global-attn K/V in a shared "
                          "block pool with per-slot block tables")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share paged KV blocks between requests with a "
+                         "common prompt prefix (copy-on-write; implies "
+                         "--paged): matched prompts skip prefill for the "
+                         "resident region")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV rows per paged block")
     ap.add_argument("--num-blocks", type=int, default=0,
@@ -133,10 +138,11 @@ def main() -> None:
         policy = "batch" if args.mode == "static-bucket" else "fifo"
     if policy is None:
         policy = "batch"
-    if policy == "batch" and (args.paged or args.prefill_chunk or args.trace):
+    paged = args.paged or args.prefix_cache
+    if policy == "batch" and (paged or args.prefill_chunk or args.trace):
         policy = "fifo"
-        print("# --paged/--prefill-chunk/--trace imply a continuous "
-              "admission policy (fifo)")
+        print("# --paged/--prefix-cache/--prefill-chunk/--trace imply a "
+              "continuous admission policy (fifo)")
 
     cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -147,10 +153,18 @@ def main() -> None:
         max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 8
     else:
         reqs = []
+        # with --prefix-cache the synthetic workload models the shared-
+        # preamble traffic the cache exists for: every prompt opens with
+        # the same first half
+        shared = rng.randint(0, cfg.vocab_size,
+                             args.prompt_len // 2).astype(np.int32) \
+            if args.prefix_cache else None
         for i in range(args.requests):
-            r = Request(i, rng.randint(0, cfg.vocab_size,
-                                       args.prompt_len).astype(np.int32),
-                        max_new_tokens=args.max_new)
+            prompt = rng.randint(0, cfg.vocab_size,
+                                 args.prompt_len).astype(np.int32)
+            if shared is not None:
+                prompt[:len(shared)] = shared
+            r = Request(i, prompt, max_new_tokens=args.max_new)
             if cfg.arch_type == "vlm":
                 r.embeds = rng.randn(cfg.frontend_tokens,
                                      cfg.frontend_dim).astype(np.float32)
@@ -161,9 +175,10 @@ def main() -> None:
         max_len = args.prompt_len + args.max_new + 8
     eng = Engine(cfg, params, EngineConfig(
         max_len=max_len, max_slots=args.slots,
-        kv_layout="paged" if args.paged else "slotted",
+        kv_layout="paged" if paged else "slotted",
         block_size=args.block_size, num_blocks=args.num_blocks,
         watermark=args.watermark, prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache,
         admission=policy, preemption=args.preemption))
 
     if policy != "batch":
@@ -185,13 +200,18 @@ def main() -> None:
               f"{np.percentile(lat, 95) * 1e3:.1f} ms; "
               f"{st['preemptions']} preemptions, "
               f"{st['slot_failures']} slot failures")
-        if args.paged:
+        if paged:
             ks = eng.kv_stats()
             print(f"# paged KV: pool {ks['paged_kv_pool_bytes'] / 1e6:.2f} "
                   f"MB, high-water {ks['paged_kv_hwm_bytes'] / 1e6:.2f} MB "
                   f"({ks['paged_kv_hwm_blocks']:.0f} blocks, watermark "
                   f"{args.watermark}) vs slotted reservation "
                   f"{ks['slotted_kv_reserved_bytes'] / 1e6:.2f} MB")
+        if args.prefix_cache:
+            print(f"# prefix cache: {st['prefix_hits']} admissions matched "
+                  f"a resident chain; {st['prefill_tokens_saved']} of "
+                  f"{st['prefill_tokens_total']} prompt tokens skipped "
+                  f"prefill")
     else:
         outs = eng.generate(reqs)
         tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)

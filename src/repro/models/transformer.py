@@ -657,6 +657,70 @@ def paged_insert(cfg: ModelConfig, cache: Dict[str, Any],
     }
 
 
+def paged_seed(cfg: ModelConfig, scratch: Dict[str, Any],
+               cache: Dict[str, Any], block_ids: jax.Array
+               ) -> Dict[str, Any]:
+    """Inverse of ``paged_insert`` for a shared prompt prefix: gather the
+    global-attention K/V rows of the pool blocks named by ``block_ids``
+    (one per logical page, in page order) into the head of a batch=1
+    dense scratch cache, so ``prefill_extend`` can resume mid-prompt
+    against them. Whole pages are copied; rows past the true match in
+    the last page are either recomputed by the extend or sit beyond the
+    prompt where causal masking never reads them. Only used for
+    ``supports_chunked_prefill`` configs, whose every cache leaf is
+    global-attention K/V."""
+    pages = block_ids.shape[0]
+
+    def one(kind, sc, c, stacked):
+        if kind != "attn":
+            return sc
+        out = dict(sc)
+        for key in ("k", "v"):
+            pool, s = c[key], sc[key]
+            if stacked:     # pool (P, N, bs, hk, hd) -> scratch (P, 1, S, ...)
+                rows = pool[:, block_ids]
+                rows = rows.reshape(rows.shape[0],
+                                    pages * pool.shape[2], *rows.shape[3:])
+                out[key] = s.at[:, 0, :rows.shape[1]].set(rows)
+            else:           # pool (N, bs, hk, hd) -> scratch (1, S, ...)
+                rows = pool[block_ids].reshape(pages * pool.shape[1],
+                                               *pool.shape[2:])
+                out[key] = s.at[0, :rows.shape[0]].set(rows)
+        return out
+
+    return {
+        "scan": [one(k, sc, c, True) for k, sc, c in
+                 zip(cfg.layer_pattern, scratch["scan"], cache["scan"])],
+        "rem": [one(k, sc, c, False) for k, sc, c in
+                zip(cfg.remainder_kinds, scratch["rem"], cache["rem"])],
+    }
+
+
+def paged_copy_block(cfg: ModelConfig, cache: Dict[str, Any],
+                     src: jax.Array, dst: jax.Array) -> Dict[str, Any]:
+    """Copy one physical block's global-attention K/V rows to another —
+    the device half of copy-on-write, giving a writer a private copy of
+    a block whose other references must keep reading the original."""
+    def one(kind, c, stacked):
+        if kind != "attn":
+            return c
+        out = dict(c)
+        for key in ("k", "v"):
+            pool = c[key]
+            if stacked:     # (P, N, bs, hk, hd)
+                out[key] = pool.at[:, dst].set(pool[:, src])
+            else:           # (N, bs, hk, hd)
+                out[key] = pool.at[dst].set(pool[src])
+        return out
+
+    return {
+        "scan": [one(k, c, True) for k, c in
+                 zip(cfg.layer_pattern, cache["scan"])],
+        "rem": [one(k, c, False) for k, c in
+                zip(cfg.remainder_kinds, cache["rem"])],
+    }
+
+
 # ---------------------------------------------------------------------------
 # VR-PRUNE actor-graph export (the Edge-PRUNE integration)
 # ---------------------------------------------------------------------------

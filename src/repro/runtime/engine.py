@@ -11,7 +11,9 @@ under a different ``EngineConfig``. The config names *policies*
   scheduler; ``"batch"`` is the seed static-bucket executor (closed
   batches grouped by prompt length, one compile per bucket);
 * ``kv_layout`` — ``"slotted"`` (dense per-slot rows) | ``"paged"``
-  (shared block pool, admission ``watermark``, growth preemption);
+  (shared block pool, admission ``watermark``, growth preemption, and
+  optional ``prefix_cache`` sharing of common prompt-prefix blocks
+  between requests with copy-on-write);
 * ``preemption`` — who loses their blocks under pool pressure:
   ``"evict-latest"`` | ``"lowest-priority"``;
 * the ``Sampler`` owns the PRNG state (greedy / temperature / seed).
@@ -69,6 +71,10 @@ class EngineConfig:
     # requests (damps growth-preemption thrash under oversubscription)
     watermark: int = 0
     prefill_chunk: int = 0      # chunked prefill (0 = one-shot)
+    # prefix sharing (paged only): admission matches new prompts against
+    # resident block chains and maps shared blocks into the request's
+    # table copy-on-write, skipping prefill for the matched region
+    prefix_cache: bool = False
     # policies: names resolved via runtime.policies, or instances
     admission: Any = "fifo"     # "fifo" | "priority" | "edf" | "batch"
     preemption: Any = "evict-latest"    # | "lowest-priority"
@@ -189,6 +195,10 @@ class Engine:
         self.config = c = config or EngineConfig()
         if c.kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {c.kv_layout!r} not in {KV_LAYOUTS}")
+        if c.prefix_cache and c.kv_layout != "paged":
+            raise ValueError(
+                "prefix_cache shares paged KV blocks between requests; "
+                "it needs kv_layout='paged'")
         self.admission = make_admission(c.admission)
         self.preemption = make_preemption(c.preemption)
         self.batch_mode = isinstance(self.admission, BatchAdmission)
@@ -220,7 +230,8 @@ class Engine:
                     temperature=c.temperature, seed=c.seed,
                     paged=c.kv_layout == "paged", block_size=c.block_size,
                     num_blocks=c.num_blocks, watermark=c.watermark,
-                    prefill_chunk=c.prefill_chunk, debug=c.debug),
+                    prefill_chunk=c.prefill_chunk,
+                    prefix_cache=c.prefix_cache, debug=c.debug),
                 failures=failures, admission=self.admission,
                 preemption=self.preemption)
             self.sampler = self.scheduler.sampler

@@ -133,6 +133,15 @@ class BatchAdmission:
 # Candidates are the tickets currently holding KV blocks (active slots
 # plus an in-flight chunked prefill), minus the slot whose growth needs
 # the blocks. .pick returns the victim ticket.
+#
+# Under prefix sharing (``prefix_cache``), evicting a victim *releases
+# its references* rather than freeing blocks outright: a block the
+# victim shares with another live request stays resident (refcount > 0)
+# and only the victim's private blocks return to the pool. A preemption
+# may therefore reclaim fewer blocks than the victim's context length
+# suggests; the scheduler keeps preempting until growth succeeds, which
+# terminates because the last survivor's worst case is validated to fit
+# the whole pool at submit time.
 
 
 class EvictLatest:

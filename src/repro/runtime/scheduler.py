@@ -17,12 +17,29 @@ half lives in ``runtime.policies``; the user-facing facade is
     (``init_paged_cache``), handed out by a ``BlockAllocator`` — on
     admission for the prompt, block-by-block during decode growth —
     and addressed through per-slot block tables. A request holds only
-    the blocks its context actually fills; eviction/failure returns
-    them (exactly once) to the pool. When the pool is exhausted,
-    admission *waits* instead of over-committing (an admission
-    ``watermark`` can additionally hold back the last few blocks to
-    damp growth-preemption thrash), and decode growth preempts
-    (re-queues, never drops) a victim chosen by the preemption policy;
+    the blocks its context actually fills; eviction/failure *releases*
+    its references (a block returns to the pool when its last reference
+    drops). When the pool is exhausted, admission *waits* instead of
+    over-committing (an admission ``watermark`` can additionally hold
+    back the last few blocks to damp growth-preemption thrash), and
+    decode growth preempts (re-queues, never drops) a victim chosen by
+    the preemption policy;
+
+* **prefix sharing** (``SchedulerConfig(prefix_cache=True)``, paged
+  only): a prefix index maps hashes of block-aligned prompt prefixes to
+  the resident block chains that hold their K/V. Admission matches a new
+  prompt against the index, maps every fully-matched block into the
+  request's table as a *shared* reference (``BlockAllocator.share``),
+  and resumes prefill mid-prompt (``prefill_extend`` over the unmatched
+  tail, attending over a scratch cache seeded from the shared blocks).
+  Shared full blocks are never written: the boundary page (partial tail
+  block, or the recomputed last prompt token) is always a private block
+  written by copy-on-write at insert time, and decode growth allocates
+  fresh pages past the prompt — with a defensive COW copy should a
+  write ever target a block with refcount > 1. Sharing is therefore
+  invisible to the decode kernels (they address K/V purely through the
+  block tables) and greedy tokens are bit-identical with sharing on or
+  off (tests/test_conformance_matrix.py);
 
 * the waiting set — *which* waiting request is admitted next is the
   injected ``AdmissionPolicy``'s call (``min(waiting, key=policy.key)``,
@@ -164,6 +181,13 @@ class SchedulerConfig:
     # interleaved with decode steps (0 = one-shot prefill). Falls back to
     # one-shot for configs/requests outside supports_chunked_prefill.
     prefill_chunk: int = 0
+    # prefix sharing (paged only): admission matches new prompts against
+    # resident block chains, maps fully-matched blocks into the request's
+    # table (refcounted, copy-on-write on any write into a shared block)
+    # and skips prefill for the matched region. Falls back silently for
+    # configs outside supports_chunked_prefill (the mid-prompt resume
+    # needs the position-indexed extend path).
+    prefix_cache: bool = False
     # assert slot/block accounting invariants at every step boundary
     debug: bool = False
 
@@ -190,17 +214,23 @@ class SlotFailure:
 
 
 class BlockAllocator:
-    """Fixed pool of KV-cache blocks with leak/double-free accounting.
+    """Fixed pool of KV-cache blocks with per-block reference counts.
 
     Physical block 0 is reserved as the null block: free slots and
     unallocated block-table entries point at it, so their (masked,
-    never-read) decode writes land somewhere harmless. ``alloc`` returns
-    None when the request can't be satisfied — the scheduler queues or
-    preempts instead of over-committing — and ``free`` raises on a block
-    that isn't currently held, so a double-free is an error, not silent
-    pool corruption. ``alloc(n, watermark=w)`` additionally refuses to
-    dip into the last ``w`` free blocks — the admission-time damper that
-    keeps headroom for the running requests' decode growth."""
+    never-read) decode writes land somewhere harmless; it is never
+    allocated and never freed. ``alloc`` hands out blocks at refcount 1
+    and returns None when the request can't be satisfied — the scheduler
+    queues or preempts instead of over-committing. ``share`` adds a
+    reference to an already-held block (prefix sharing maps one physical
+    block into several requests' tables); ``release`` drops one
+    reference per block and returns a block to the free pool only when
+    its count reaches zero. Releasing a block that isn't held raises, so
+    a double-free is an error, not silent pool corruption (``free`` is
+    the legacy alias of ``release``). ``alloc(n, watermark=w)``
+    additionally refuses to dip into the last ``w`` free blocks — the
+    admission-time damper that keeps headroom for the running requests'
+    decode growth."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 2:
@@ -209,7 +239,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
-        self._held: set = set()
+        self._refs: Dict[int, int] = {}     # block -> reference count
         self.hwm = 0                    # high-water mark, blocks in use
 
     @property
@@ -222,33 +252,62 @@ class BlockAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._held)
+        return len(self._refs)
+
+    def refcount(self, block: int) -> int:
+        """Current reference count of ``block`` (0 = not held)."""
+        return self._refs.get(block, 0)
 
     def alloc(self, n: int, watermark: int = 0) -> Optional[List[int]]:
         if n + watermark > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
-        self._held.update(blocks)
-        self.hwm = max(self.hwm, len(self._held))
+        for b in blocks:
+            self._refs[b] = 1
+        self.hwm = max(self.hwm, len(self._refs))
         return blocks
+
+    def share(self, blocks: List[int]) -> None:
+        """Add one reference to each (already-held) block — the prefix-
+        sharing path, mapping a resident chain into another table."""
+        for b in blocks:
+            if b not in self._refs:
+                raise ValueError(f"block {b} shared but not held")
+            self._refs[b] += 1
 
     def reset_hwm(self) -> None:
         """Restart high-water tracking from the current occupancy (e.g.
         between a warmup drain and a measured run)."""
-        self.hwm = len(self._held)
+        self.hwm = len(self._refs)
 
-    def free(self, blocks: List[int]) -> None:
+    def release(self, blocks: List[int]) -> List[int]:
+        """Drop one reference per block; blocks whose count reaches zero
+        return to the free pool. Returns the blocks actually freed (the
+        caller invalidates prefix-index entries for exactly those)."""
+        freed: List[int] = []
         for b in blocks:
-            if b not in self._held:
+            count = self._refs.get(b)
+            if count is None:
                 raise ValueError(f"block {b} freed but not held "
                                  f"(double free or foreign block)")
-            self._held.remove(b)
-            self._free.append(b)
+            if count == 1:
+                del self._refs[b]
+                self._free.append(b)
+                freed.append(b)
+            else:
+                self._refs[b] = count - 1
+        return freed
+
+    # legacy name: without share() every refcount is 1 and release ==
+    # the old free-exactly-once semantics
+    free = release
 
     def check(self) -> None:
-        assert len(self._free) + len(self._held) == self.capacity, \
-            (len(self._free), len(self._held), self.capacity)
-        assert 0 not in self._held and 0 not in self._free
+        assert len(self._free) + len(self._refs) == self.capacity, \
+            (len(self._free), len(self._refs), self.capacity)
+        assert 0 not in self._refs and 0 not in self._free
+        assert all(c >= 1 for c in self._refs.values()), \
+            "refcount dropped below 1 while held"
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +365,9 @@ class SlottedLayout:
     def bind(self, slot: int, blocks: List[int]) -> None:
         pass
 
+    def register_prefix(self, slot: int, prompt: np.ndarray) -> None:
+        pass                            # sharing is a paged-pool feature
+
     def insert(self, req_cache, slot: int) -> None:
         self.cache = self._insert(self.cache, req_cache, jnp.int32(slot))
 
@@ -336,12 +398,32 @@ class SlottedLayout:
         pass
 
 
+@dataclass
+class _PagedReservation:
+    """Outcome of a paged admission reservation. ``blocks`` is the
+    slot's table in page order: the first ``shared_pages`` entries are
+    resident blocks mapped in by the prefix match (refcount already
+    incremented), the rest freshly allocated private blocks.
+    ``seed_blocks`` are the source blocks whose pool rows cover prompt
+    positions ``[0, matched_rows)`` — the scratch cache is seeded from
+    them so ``prefill_extend`` can resume mid-prompt. The boundary page
+    (the one containing row ``matched_rows``) is always private: its
+    shared rows are copied through the scratch and written at insert
+    time — copy-on-write realized at admission."""
+    blocks: List[int]
+    shared_pages: int = 0
+    seed_blocks: List[int] = field(default_factory=list)
+    matched_rows: int = 0
+
+
 class PagedLayout:
     """Block-pool KV: global-attention K/V in shared fixed-size blocks
     addressed through per-slot block tables; local-window / recurrent
     state stays slot-indexed inside the same cache pytree. Owns the
-    allocator, the tables, and the per-slot block bookkeeping (freed
-    exactly once on release, whoever triggers it)."""
+    allocator, the tables, the per-slot block bookkeeping (references
+    released exactly once, whoever triggers it) and — with
+    ``prefix_cache`` — the prefix index that lets admissions share
+    resident block chains."""
 
     paged = True
 
@@ -378,9 +460,121 @@ class PagedLayout:
         self._insert_paged = jax.jit(
             lambda c, rc, bids, slot: T.paged_insert(
                 cfg, c, rc, bids, slot, block_size=s.block_size))
+        # prefix sharing: the mid-prompt resume runs through
+        # prefill_extend, so gate on the same support predicate as
+        # chunked prefill (silent fallback, like prefill_chunk)
+        self.prefix_cache = s.prefix_cache and T.supports_chunked_prefill(cfg)
+        # chained hash of a block-aligned token prefix -> (resident block
+        # holding its last page of K/V rows, that page's tokens). The
+        # tokens are compared on every match, so a hash collision can
+        # degrade to a miss but never share foreign K/V.
+        self._prefix_full: Dict[int, Tuple[int, np.ndarray]] = {}
+        # chained hash of a prompt's full pages -> [(tail block, prompt
+        # length, tail tokens), ...] for prompts whose last page is
+        # partially filled: one bucket per full-page chain, so a
+        # boundary probe is a single lookup plus tail comparisons
+        self._prefix_partial: Dict[int, List[Tuple[int, int,
+                                                   np.ndarray]]] = {}
+        self._block_keys: Dict[int, List[Tuple[str, int]]] = {}
+        self._shared_pages: Dict[int, int] = {}     # slot -> shared table pages
+        self._table_pending: Dict[int, List[int]] = {}  # bound, not inserted
+        self._seed = jax.jit(
+            lambda sc, c, bids: T.paged_seed(cfg, sc, c, bids))
+        self._copy_block = jax.jit(
+            lambda c, src, dst: T.paged_copy_block(cfg, c, src, dst))
+        self.prefix_hits = 0            # admissions that matched a chain
 
     def _prompt_need(self, req: Request) -> int:
         return max(1, -(-len(req.prompt) // self.block_size))
+
+    # -- prefix index -------------------------------------------------------
+
+    # Keys are *chained* hashes: key_p = hash(key_{p-1}, page-p tokens),
+    # so matching/registering a prompt hashes every token once — O(L) —
+    # instead of re-hashing the prefix from position 0 per boundary
+    # (O(L^2/bs)). Entries carry the tokens they summarize; a match
+    # compares them, so a hash collision degrades to a cache miss, never
+    # to sharing foreign K/V.
+
+    @staticmethod
+    def _chain(key: int, tokens: np.ndarray) -> int:
+        return hash((key, np.ascontiguousarray(tokens, np.int32).tobytes()))
+
+    def match_prefix(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """Longest resident match for ``prompt``: returns (source blocks
+        covering pages 0..ceil(matched/bs)-1, matched row count). Matches
+        are capped at ``len(prompt) - 1`` rows — the last prompt token is
+        always recomputed so admission has logits to sample the first
+        output token from."""
+        bs = self.block_size
+        cap = len(prompt) - 1
+        src: List[int] = []
+        key = 0
+        while (len(src) + 1) * bs <= cap:
+            page = prompt[len(src) * bs:(len(src) + 1) * bs]
+            nxt = self._chain(key, page)
+            entry = self._prefix_full.get(nxt)
+            if entry is None or not np.array_equal(entry[1], page):
+                break
+            src.append(entry[0])
+            key = nxt
+        k = len(src)
+        matched = k * bs
+        # boundary extension into page k: (a) a full resident block whose
+        # prefix covers this whole prompt (the capped exact-cover case),
+        # else (b) a resident partial tail block with an identical fill
+        if (k + 1) * bs == len(prompt):
+            page = prompt[k * bs:]
+            entry = self._prefix_full.get(self._chain(key, page))
+            if entry is not None and np.array_equal(entry[1], page):
+                return src + [entry[0]], cap
+        best = None
+        for blk, length, tail in self._prefix_partial.get(key, ()):
+            if length <= cap and (best is None or length > best[1]) \
+                    and np.array_equal(tail, prompt[k * bs:length]):
+                best = (blk, length)
+        if best is not None:
+            return src + [best[0]], best[1]
+        return src, matched
+
+    def register_prefix(self, slot: int, prompt: np.ndarray) -> None:
+        """Index ``slot``'s freshly-inserted prompt K/V so later
+        admissions can share it: one entry per block-aligned prefix
+        (full blocks only) plus a whole-prompt entry for a partially
+        filled tail block. First writer wins; entries die with their
+        block (refcount 0 -> unregister)."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        table = self.block_tables[slot]
+        key = 0
+        for p in range(len(prompt) // bs):
+            page = prompt[p * bs:(p + 1) * bs]
+            key = self._chain(key, page)
+            if key not in self._prefix_full:
+                blk = int(table[p])
+                self._prefix_full[key] = (blk, np.array(page, np.int32))
+                self._block_keys.setdefault(blk, []).append(("full", key))
+        if len(prompt) % bs:
+            tail = np.array(prompt[-(len(prompt) % bs):], np.int32)
+            bucket = self._prefix_partial.setdefault(key, [])
+            if not any(length == len(prompt) and np.array_equal(t, tail)
+                       for _, length, t in bucket):
+                blk = int(table[len(prompt) // bs])
+                bucket.append((blk, len(prompt), tail))
+                self._block_keys.setdefault(blk, []).append(("partial", key))
+
+    def _unregister(self, freed: List[int]) -> None:
+        for b in freed:
+            for kind, key in self._block_keys.pop(b, ()):
+                if kind == "full":
+                    self._prefix_full.pop(key, None)
+                    continue
+                bucket = self._prefix_partial.get(key)
+                if bucket is not None:
+                    bucket[:] = [e for e in bucket if e[0] != b]
+                    if not bucket:
+                        del self._prefix_partial[key]
 
     def validate(self, req: Request) -> None:
         """Reject requests the pool can never serve. Two separate
@@ -401,22 +595,83 @@ class PagedLayout:
                 f"but admission holds back watermark {self.watermark} of "
                 f"{self.alloc.capacity} — can never be admitted")
 
-    def try_reserve(self, req: Request) -> Optional[List[int]]:
-        return self.alloc.alloc(self._prompt_need(req),
-                                watermark=self.watermark)
+    def try_reserve(self, req: Request) -> Optional[_PagedReservation]:
+        """Reserve the prompt's blocks, sharing what the prefix index can
+        supply: fully-matched pages map resident blocks into the table
+        (one extra reference each), only the remainder is allocated. The
+        boundary page is always among the private blocks (see
+        ``_PagedReservation``). Returns None when the pool (minus the
+        admission watermark) can't supply the private need — admission
+        waits rather than over-commit."""
+        if 1 + self.watermark > self.alloc.available:
+            # the boundary page is always private, so no reservation can
+            # succeed — skip the O(prompt) prefix match a dry pool would
+            # otherwise re-run every scheduler step
+            return None
+        src: List[int] = []
+        matched = 0
+        if self.prefix_cache and req.embeds is None:
+            src, matched = self.match_prefix(req.prompt)
+        shared_pages = matched // self.block_size
+        private = self.alloc.alloc(self._prompt_need(req) - shared_pages,
+                                   watermark=self.watermark)
+        if private is None:
+            return None
+        chain = src[:shared_pages]
+        self.alloc.share(chain)
+        if matched:
+            self.prefix_hits += 1
+        return _PagedReservation(blocks=chain + private,
+                                 shared_pages=shared_pages,
+                                 seed_blocks=src, matched_rows=matched)
 
-    def bind(self, slot: int, blocks: List[int]) -> None:
-        self.block_tables[slot, :len(blocks)] = blocks
-        self._slot_blocks[slot] = list(blocks)
+    def bind(self, slot: int, res: _PagedReservation) -> None:
+        """Take ownership of the reservation's blocks for ``slot``. The
+        block table row stays zeroed (null block) until the insert
+        commits it: decode steps interleave with a chunked prefill, and
+        the batched decode writes every slot's (masked, never-read) K/V
+        row through the table — a mid-prefill slot must direct those at
+        the null block, not at a block another request shares."""
+        self._slot_blocks[slot] = list(res.blocks)
+        self._shared_pages[slot] = res.shared_pages
+        self._table_pending[slot] = list(res.blocks)
+
+    def _commit_table(self, slot: int) -> None:
+        blocks = self._table_pending.pop(slot, None)
+        if blocks is not None:
+            self.block_tables[slot, :len(blocks)] = blocks
+
+    def _insert_ids(self, slot: int) -> np.ndarray:
+        """Block ids for a prompt insert: shared pages are redirected to
+        the null block so their (already-resident, possibly recomputed)
+        rows are dropped instead of overwriting a block another request
+        reads — the write half of copy-on-write."""
+        ids = self.block_tables[slot].copy()
+        ids[:self._shared_pages.get(slot, 0)] = 0
+        return ids
 
     def insert(self, req_cache, slot: int) -> None:
+        self._commit_table(slot)
         self.cache = self._insert_paged(
-            self.cache, req_cache, jnp.asarray(self.block_tables[slot]),
+            self.cache, req_cache, jnp.asarray(self._insert_ids(slot)),
             jnp.int32(slot))
 
     # the chunk-rounded scratch cache inserts through the same block
     # table; rows past the table's coverage are never addressed
     insert_scratch = insert
+
+    def seed_scratch(self, scratch_cache, res: _PagedReservation,
+                     rows: int):
+        """Copy the matched prefix's K/V out of the resident pool blocks
+        into the head of a batch=1 scratch cache, so ``prefill_extend``
+        can resume at ``rows`` instead of position 0. Whole pages are
+        copied (rows past ``rows`` in the last page are overwritten by
+        the extend, or sit beyond the prompt where attention never
+        reads); the source blocks are read synchronously at admission,
+        so no reference is taken."""
+        pages = -(-rows // self.block_size)
+        return self._seed(scratch_cache, self.cache,
+                          jnp.asarray(res.seed_blocks[:pages], jnp.int32))
 
     def decode(self, params, tokens: jax.Array, cache_len: jax.Array):
         logits, self.cache, _ = self._decode(
@@ -425,23 +680,41 @@ class PagedLayout:
         return logits
 
     def needs_block(self, slot: int, pos: int) -> bool:
-        return not self.block_tables[slot, pos // self.block_size]
+        blk = int(self.block_tables[slot, pos // self.block_size])
+        return not blk or self.alloc.refcount(blk) > 1
 
     def grow_one(self, slot: int, pos: int) -> bool:
-        """Allocate the block covering position ``pos`` for ``slot``.
+        """Make the block covering position ``pos`` privately writable
+        for ``slot``: allocate it if the table entry is empty, or — if
+        the entry names a block some other request still references —
+        copy-on-write it into a fresh block first. (With prompt-only
+        sharing the COW branch is structurally unreachable: shared pages
+        lie strictly below the prompt tail, decode writes strictly above
+        it. It is kept as the safety net the sharing invariant promises.)
         Growth ignores the admission watermark — the headroom it guards
         exists precisely for the running requests' growth."""
+        page = pos // self.block_size
         blocks = self.alloc.alloc(1)
         if blocks is None:
             return False
-        self.block_tables[slot, pos // self.block_size] = blocks[0]
-        self._slot_blocks[slot].append(blocks[0])
+        cur = int(self.block_tables[slot, page])
+        if cur:                         # shared entry: copy before write
+            self.cache = self._copy_block(self.cache, jnp.int32(cur),
+                                          jnp.int32(blocks[0]))
+            held = self._slot_blocks[slot]
+            held[held.index(cur)] = blocks[0]
+            self._unregister(self.alloc.release([cur]))
+        else:
+            self._slot_blocks[slot].append(blocks[0])
+        self.block_tables[slot, page] = blocks[0]
         return True
 
     def release(self, slot: int) -> None:
         blocks = self._slot_blocks.pop(slot, [])
+        self._shared_pages.pop(slot, None)
+        self._table_pending.pop(slot, None)
         if blocks:
-            self.alloc.free(blocks)
+            self._unregister(self.alloc.release(blocks))
         self.block_tables[slot] = 0
 
     def kv_stats(self, s: SchedulerConfig, cfg: ModelConfig) -> Dict[str, float]:
@@ -457,24 +730,33 @@ class PagedLayout:
         }
 
     def check(self, occupied_slots: set, max_slots: int) -> None:
-        """Block books: every held block is named by exactly one table
-        entry of exactly one occupied slot."""
+        """Block books: every held block's reference count equals the
+        number of table entries naming it across occupied slots (one
+        per slot — a slot never maps the same block at two pages), and
+        the prefix index only names held blocks."""
         self.alloc.check()
         assert set(self._slot_blocks) == occupied_slots, \
             (set(self._slot_blocks), occupied_slots)
-        held: List[int] = []
-        for blocks in self._slot_blocks.values():
-            held.extend(blocks)
-        assert len(held) == len(set(held)), "block owned by two slots"
-        assert set(held) == self.alloc._held, (set(held), self.alloc._held)
+        refs: Counter = Counter()
+        for slot, blocks in self._slot_blocks.items():
+            assert len(blocks) == len(set(blocks)), \
+                f"slot {slot} references a block at two pages"
+            entries = self.block_tables[slot][self.block_tables[slot] > 0]
+            if slot in self._table_pending:     # bound, prefill in flight
+                assert not entries.size, \
+                    f"slot {slot}: table committed before insert"
+            else:
+                assert sorted(entries.tolist()) == sorted(blocks), \
+                    f"slot {slot}: table and block list disagree"
+            refs.update(blocks)
+        assert dict(refs) == self.alloc._refs, (dict(refs), self.alloc._refs)
         for slot in range(max_slots):
             if slot not in occupied_slots:
                 assert not self.block_tables[slot].any(), \
                     f"slot {slot}: stale block table"
-        table_entries = self.block_tables[self.block_tables > 0]
-        assert len(table_entries) == len(set(table_entries.tolist())), \
-            "block mapped by two table entries"
-        assert set(table_entries.tolist()) == self.alloc._held
+        for blk in self._block_keys:
+            assert blk in self.alloc._refs, \
+                f"prefix index names freed block {blk}"
 
 
 # ---------------------------------------------------------------------------
@@ -555,12 +837,20 @@ class ContinuousScheduler:
             else 0
         self._scratch_len = -(-max_len // self._chunk) * self._chunk \
             if self._chunk else max_len
-        if self._chunk:
-            self._extend_fn = jax.jit(
-                lambda p, tok, c, cl: T.prefill_extend(p, cfg, tok, c, cl))
         self._chunking: Optional[_ChunkedPrefill] = None
         layout_cls = PagedLayout if s.paged else SlottedLayout
         self.layout = layout_cls(cfg, s, max_len, self._scratch_len)
+        # prefix sharing resumes prefill mid-prompt through the same
+        # extend path chunked prefill uses (the layout re-checks config
+        # support, so the flag is the effective one)
+        self._prefix = getattr(self.layout, "prefix_cache", False)
+        if self._chunk or self._prefix:
+            self._extend_fn = jax.jit(
+                lambda p, tok, c, cl: T.prefill_extend(p, cfg, tok, c, cl))
+        # prefill-work accounting for the serving bench: prompt tokens
+        # admitted vs prompt tokens whose K/V came from a shared prefix
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
         # Persistent slot state. cache_len/tokens (and the layout's block
         # tables) are host-side mirrors so admission/eviction never
         # touches device state beyond the insert.
@@ -734,7 +1024,10 @@ class ContinuousScheduler:
         c = Counter(e.kind for e in self.events)
         return {"admissions": c["admit"], "evictions": c["evict"],
                 "preemptions": c["preempt"], "slot_failures": c["fail"],
-                "cancellations": c["cancel"], "steps": self.step_count}
+                "cancellations": c["cancel"], "steps": self.step_count,
+                "prefix_hits": getattr(self.layout, "prefix_hits", 0),
+                "prefill_tokens_total": self.prefill_tokens_total,
+                "prefill_tokens_saved": self.prefill_tokens_saved}
 
     # -- internals ----------------------------------------------------------
 
@@ -925,20 +1218,32 @@ class ContinuousScheduler:
             chunked = self._chunk > 0 and r.embeds is None
             if chunked and self._chunking is not None:
                 break           # one chunked prefill in flight at a time
-            blocks = self.layout.try_reserve(r)
-            if blocks is None:
+            res = self.layout.try_reserve(r)
+            if res is None:
                 break           # pool exhausted: wait, don't over-commit
             heapq.heappop(self.queue)
             slot = self.free.pop()
             ticket.admit_seq = self._admit_seq
             self._admit_seq += 1
-            self.layout.bind(slot, blocks)
+            self.layout.bind(slot, res)
+            self.prefill_tokens_total += len(r.prompt)
+            matched = getattr(res, "matched_rows", 0)
             if chunked:
+                # resume at the last chunk boundary inside the matched
+                # region, so every extend step keeps the compiled chunk
+                # shape (shared pages beyond the resume point still save
+                # memory; their recomputed rows are dropped at insert)
+                resume = (matched // self._chunk) * self._chunk
+                scratch = T.init_cache(self.cfg, 1, self._scratch_len)
+                if resume:
+                    scratch = self.layout.seed_scratch(scratch, res, resume)
+                    self.prefill_tokens_saved += resume
                 ticket.slot = slot
                 ticket.where = "chunking"
                 self._chunking = _ChunkedPrefill(
-                    ticket=ticket, slot=slot,
-                    cache=T.init_cache(self.cfg, 1, self._scratch_len))
+                    ticket=ticket, slot=slot, cache=scratch, pos=resume)
+            elif matched:
+                self._admit_prefix_resume(ticket, slot, res, matched, t0)
             else:
                 self._admit_one_shot(ticket, slot, t0)
         return out
@@ -952,9 +1257,37 @@ class ContinuousScheduler:
         logits, req_cache, clen = jax.block_until_ready(
             self._prefill_fn(self.params, batch))
         self.layout.insert(req_cache, slot)
+        if self._prefix and r.embeds is None:
+            self.layout.register_prefix(slot, r.prompt)
         ticket.prefill_s += time.perf_counter() - tp
         first = int(self.sampler(logits)[0])
         self._activate(ticket, slot, first, int(clen[0]), t0)
+
+    def _admit_prefix_resume(self, ticket: _Ticket, slot: int, res,
+                             matched: int, t0: float) -> None:
+        """Prefix-cache hit on the one-shot path: the matched prompt
+        rows' K/V already sit in resident pool blocks (now mapped into
+        this slot's table), so prefill runs only over the unmatched tail
+        — a scratch cache is seeded with the matched rows and one
+        ``prefill_extend`` resumes mid-prompt. The insert then writes
+        only the private pages (shared pages keep the resident blocks).
+        Greedy tokens are bit-identical to a full prefill: the seeded
+        rows are exactly what this prompt's prefill would recompute."""
+        r = ticket.req
+        tp = time.perf_counter()
+        scratch = T.init_cache(self.cfg, 1, self._scratch_len)
+        scratch = self.layout.seed_scratch(scratch, res, matched)
+        tail = jnp.asarray(np.ascontiguousarray(r.prompt[matched:],
+                                                np.int32)[None])
+        logits, scratch, _ = jax.block_until_ready(self._extend_fn(
+            self.params, tail, scratch,
+            jnp.full((1,), matched, jnp.int32)))
+        self.layout.insert_scratch(scratch, slot)
+        self.layout.register_prefix(slot, r.prompt)
+        ticket.prefill_s += time.perf_counter() - tp
+        self.prefill_tokens_saved += matched
+        first = int(self.sampler(logits[:, -1])[0])
+        self._activate(ticket, slot, first, len(r.prompt), t0)
 
     def _advance_chunked(self, t0: float) -> None:
         """Run ONE prefill chunk of the in-flight chunked admission, so
@@ -978,6 +1311,8 @@ class ContinuousScheduler:
         if st.pos < len(r.prompt):
             return
         self.layout.insert_scratch(st.cache, st.slot)
+        if self._prefix and r.embeds is None:
+            self.layout.register_prefix(st.slot, r.prompt)
         first = int(self.sampler(logits[:, real - 1])[0])
         self._chunking = None
         self._activate(st.ticket, st.slot, first, len(r.prompt), t0)

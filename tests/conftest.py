@@ -1,0 +1,27 @@
+"""Shared test configuration.
+
+Registers a fixed hypothesis profile so property tests are reproducible
+in CI: ``derandomize=True`` makes every run draw the same example
+sequence (a red nightly reproduces locally with no shrinking lottery),
+and the per-example deadline is bounded but generous — first examples
+pay JAX compiles; tests that interleave many compiles opt out with
+``deadline=None`` in their own ``@settings``. Select another profile
+with ``HYPOTHESIS_PROFILE=<name>`` (e.g. ``dev`` to re-randomize
+locally).
+"""
+from __future__ import annotations
+
+import os
+
+try:
+    from datetime import timedelta
+
+    from hypothesis import settings
+except ImportError:                     # fast lane runs without hypothesis
+    pass
+else:
+    settings.register_profile(
+        "ci", derandomize=True, deadline=timedelta(seconds=60),
+        print_blob=True)
+    settings.register_profile("dev", deadline=timedelta(seconds=60))
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))

@@ -3,9 +3,9 @@
 * policy objects in isolation — admission orders (FIFO / priority /
   EDF), preemption victim selection, static bucketing — exercised with
   plain records, no JAX;
-* the ``Engine`` facade — every admission/layout combination emits the
-  static path's exact greedy tokens; policy order is observable in the
-  admission event trace;
+* the ``Engine`` facade — policy order is observable in the admission
+  event trace (token identity across the full admission/layout/
+  preemption matrix lives in tests/test_conformance_matrix.py);
 * the request lifecycle — ``RequestHandle.cancel()`` (queued, active,
   from inside a token callback: never a token after cancel() returns),
   per-token streaming (callback and pull iterator), ``finish_reason``
@@ -13,8 +13,8 @@
   under ``SlotFailure``;
 * the paged admission watermark — damps growth preemptions without
   changing tokens;
-* the legacy ``ServeEngine`` shim — warns, and produces byte-identical
-  output through the new facade;
+* (the legacy ``ServeEngine`` shim has a dedicated regression suite in
+  tests/test_serving_shim.py);
 * a hypothesis property: ANY interleaving of submit / cancel / priority
   / deadline / failure events leaks no slots or blocks, and a cancelled
   request never emits a token after ``cancel()`` returns.
@@ -35,7 +35,6 @@ from repro.runtime.policies import (BatchAdmission, DeadlineAdmission,
                                     LowestPriority, PriorityAdmission,
                                     make_admission, make_preemption)
 from repro.runtime.scheduler import Request, SlotFailure
-from repro.runtime.serving import ServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
@@ -118,34 +117,9 @@ def test_policy_factories():
 
 
 # ---------------------------------------------------------------------------
-# Engine facade: configuration matrix stays token-identical to batch
+# Engine facade: policy order is observable (token identity across the
+# whole layout/policy matrix lives in tests/test_conformance_matrix.py)
 # ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("kw", [
-    dict(admission="priority"),
-    dict(admission="edf", kv_layout="paged", block_size=8),
-    dict(admission="priority", kv_layout="paged", block_size=4,
-         num_blocks=16, preemption="lowest-priority", prefill_chunk=4),
-], ids=["priority", "edf-paged", "priority-paged-chunked-tight"])
-def test_policy_matrix_matches_batch_tokens(setup, kw):
-    """Admission/preemption policies move waiting time, never content:
-    every combination must emit the static-bucket executor's exact
-    greedy tokens (priorities and deadlines drawn adversarially)."""
-    cfg, params = setup
-    static = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
-    ref = static.generate(_mixed_requests(cfg, MIXED_SPECS))
-    reqs = _mixed_requests(cfg, MIXED_SPECS)
-    for i, r in enumerate(reqs):        # adversarial policy inputs
-        r.priority = (i * 7) % 3
-        r.deadline_s = None if i % 3 == 0 else 0.01 * ((i * 5) % 4)
-    eng = Engine(cfg, params, EngineConfig(max_len=64, max_slots=3,
-                                           debug=True, **kw))
-    outs = eng.generate(reqs)
-    assert [c.id for c in outs] == [c.id for c in ref]
-    for a, b in zip(ref, outs):
-        assert b.tokens == a.tokens, f"request {a.id} diverged"
-    assert all(c.finish_reason == "length" for c in outs)
-
 
 def test_priority_admission_order_is_observable(setup):
     cfg, params = setup
@@ -447,37 +421,8 @@ def test_watermark_never_blocks_a_servable_request(setup):
             kv_layout="paged", block_size=4, num_blocks=8, watermark=7))
 
 
-# ---------------------------------------------------------------------------
-# legacy shim
-# ---------------------------------------------------------------------------
-
-def test_serve_engine_shim_warns_and_matches(setup):
-    cfg, params = setup
-    reqs = _mixed_requests(cfg, MIXED_SPECS)
-    ref = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
-        .generate(reqs)
-    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
-        legacy = ServeEngine(cfg, params, max_len=64)
-    assert [c.tokens for c in legacy.generate(reqs)] == \
-        [c.tokens for c in ref]
-    with pytest.warns(DeprecationWarning):
-        cont = ServeEngine(cfg, params, max_len=64, mode="continuous",
-                           max_slots=2, paged=True, block_size=8)
-    assert [c.tokens for c in cont.generate(reqs)] == \
-        [c.tokens for c in ref]
-    # legacy mode-conditional errors are preserved
-    with pytest.warns(DeprecationWarning):
-        static = ServeEngine(cfg, params, max_len=64)
-    with pytest.raises(ValueError, match="arrivals requires"):
-        static.generate(reqs, arrivals=[0.0] * len(reqs))
-    with pytest.raises(ValueError, match="on_completion requires"):
-        static.generate(reqs, on_completion=lambda c: None)
-    with pytest.raises(ValueError, match="mode"):
-        with pytest.warns(DeprecationWarning):
-            ServeEngine(cfg, params, mode="bogus")
-    with pytest.raises(ValueError, match="continuous"):
-        with pytest.warns(DeprecationWarning):
-            ServeEngine(cfg, params, paged=True)
+# (the legacy ServeEngine shim has its own regression suite in
+# tests/test_serving_shim.py)
 
 
 # ---------------------------------------------------------------------------

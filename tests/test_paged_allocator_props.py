@@ -6,11 +6,20 @@ The paged scheduler's contract, stated as properties:
   interleaving of allocations and frees — the books (free + held ==
   capacity, null block untouchable) balance after every operation, and
   freeing a block twice raises instead of silently corrupting the pool;
+* with reference counting in play (``share``/``release``), counts track
+  an exact model across ANY alloc/share/release interleaving: never
+  negative, a block frees exactly when its last reference drops, and a
+  shared block survives any strict subset of its holders releasing;
 * a ``ContinuousScheduler`` drain over ANY workload/failure interleaving
   (admissions, evictions, chunked prefills, ``SlotFailure`` injections,
   growth preemptions under an oversubscribed pool) returns every block
   exactly once: per-step invariants hold (``debug=True``), every request
-  still gets its full token budget, and the pool is whole afterwards.
+  still gets its full token budget, and the pool is whole afterwards;
+* the same holds with ``prefix_cache`` sharing on and prompts drawn with
+  overlapping prefixes, with cancellation and preemption in the mix: a
+  block referenced by a live request is never handed out again (the
+  per-step debug invariant pins refcount == table references exactly),
+  and the pool is fully free at drain with an empty prefix index.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import pytest
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.scheduler import (BlockAllocator, ContinuousScheduler,
                                      Request, SchedulerConfig, SlotFailure)
 
@@ -58,6 +68,63 @@ def test_property_allocator_books_balance(data):
         alloc.free(held)
         with pytest.raises(ValueError, match="double free|not held"):
             alloc.free(held[:1])
+
+
+@settings(max_examples=200, deadline=None)
+@given(data=st.data())
+def test_property_refcounts_track_exact_model(data):
+    """Random alloc/share/release interleavings against a reference
+    model: counts never go negative (releasing an unheld block raises),
+    a block returns to the pool exactly when its model count hits zero,
+    and accounting (in_use / available / check) stays exact throughout."""
+    num_blocks = data.draw(st.integers(2, 24), label="num_blocks")
+    alloc = BlockAllocator(num_blocks, block_size=4)
+    model: dict = {}                    # block -> expected refcount
+    for _ in range(data.draw(st.integers(0, 60), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["alloc", "share", "release"]), label="op")
+        if op == "alloc":
+            n = data.draw(st.integers(0, num_blocks), label="n_alloc")
+            got = alloc.alloc(n)
+            if n > num_blocks - 1 - len(model):
+                assert got is None, "over-committed the pool"
+            else:
+                assert got is not None and len(got) == n and 0 not in got
+                for b in got:
+                    assert b not in model, "handed out a held block"
+                    model[b] = 1
+        elif op == "share" and model:
+            picks = data.draw(st.lists(st.sampled_from(sorted(model)),
+                                       max_size=6), label="share")
+            alloc.share(picks)
+            for b in picks:
+                model[b] += 1
+        elif op == "release" and model:
+            picks = data.draw(st.lists(st.sampled_from(sorted(model)),
+                                       max_size=6, unique=True),
+                              label="release")
+            freed = alloc.release(picks)
+            expect_freed = []
+            for b in picks:
+                model[b] -= 1
+                if model[b] == 0:
+                    del model[b]
+                    expect_freed.append(b)
+            assert freed == expect_freed
+        alloc.check()
+        assert alloc.in_use == len(model)
+        for b, c in model.items():
+            assert alloc.refcount(b) == c
+        assert alloc.refcount(0) == 0
+    # drain the model completely; a further release must raise
+    while model:
+        b = next(iter(model))
+        alloc.release([b] * model.pop(b))
+    assert alloc.available == alloc.capacity
+    with pytest.raises(ValueError, match="double free|not held"):
+        alloc.release([1])
+    with pytest.raises(ValueError, match="not held"):
+        alloc.share([1])
 
 
 CFG = ModelConfig(
@@ -109,3 +176,91 @@ def test_property_no_block_leaks_under_any_interleaving(data):
     assert sched.alloc.available == sched.alloc.capacity
     assert not sched.block_tables.any()
     assert not sched.cache_len.any() and not sched.tokens.any()
+
+
+# shared 8-token preamble pool: prompts drawn below overlap pairwise on
+# whole blocks (block_size=4), so prefix matches actually occur
+_PREFIX_RNG = np.random.RandomState(99)
+PREFIXES = [_PREFIX_RNG.randint(0, CFG.vocab_size, 8).astype(np.int32)
+            for _ in range(2)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_property_prefix_sharing_interleavings(data):
+    """Arbitrary admit/evict/cancel/fail/preempt interleavings with
+    overlapping prompt prefixes under ``prefix_cache=True``: per-step
+    debug invariants pin refcounts to table references exactly (so a
+    block referenced by a live request can never be reused — it is not
+    in the free list while referenced), refcounts never go negative
+    (allocator check), completions are exactly one per request with
+    frozen streams after cancel, and at drain the pool is fully free
+    with an empty prefix index."""
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16),
+                                          label="seed"))
+    n_req = data.draw(st.integers(2, 7), label="n_req")
+    max_slots = data.draw(st.integers(1, 3), label="max_slots")
+    chunk = data.draw(st.sampled_from([0, 4]), label="prefill_chunk")
+    # worst case: 8 + 4 prompt + 6 new tokens - 1 -> 17 rows -> 5 blocks
+    num_blocks = data.draw(st.integers(6, 14), label="num_blocks")
+    n_fail = data.draw(st.integers(0, 2), label="n_fail")
+    failures = [SlotFailure(step=data.draw(st.integers(0, 20),
+                                           label=f"fail_step{i}"),
+                            slots=data.draw(st.sampled_from(
+                                [None, (0,), (0, 1)]),
+                                label=f"fail_slots{i}"))
+                for i in range(n_fail)]
+    eng = Engine(CFG, PARAMS, EngineConfig(
+        max_len=20, max_slots=max_slots, kv_layout="paged", block_size=4,
+        num_blocks=num_blocks, prefill_chunk=chunk, prefix_cache=True,
+        admission=data.draw(st.sampled_from(["fifo", "priority", "edf"]),
+                            label="admission"),
+        preemption=data.draw(st.sampled_from(
+            ["evict-latest", "lowest-priority"]), label="preemption"),
+        debug=True), failures=failures)
+    handles, frozen = [], {}
+    for i in range(n_req):
+        head = PREFIXES[data.draw(st.integers(0, len(PREFIXES) - 1),
+                                  label=f"head{i}")]
+        tail_len = data.draw(st.integers(0, 4), label=f"tail{i}")
+        prompt = np.concatenate(
+            [head, rng.randint(0, CFG.vocab_size, tail_len)
+             .astype(np.int32)]) if tail_len else head.copy()
+        h = eng.submit(Request(
+            i, prompt, max_new_tokens=int(rng.randint(1, 7)),
+            priority=int(rng.randint(0, 3)),
+            deadline_s=None if rng.rand() < 0.5
+            else float(rng.rand() * 0.2)))
+        cancel_at = data.draw(st.sampled_from([None, 0, 2]),
+                              label=f"cancel_at{i}")
+        if cancel_at == 0:
+            h.cancel()
+            frozen[i] = []
+        elif cancel_at is not None:
+            def make_cb(h=h, at=cancel_at, i=i):
+                def cb(tok):
+                    if len(h.tokens) >= at and i not in frozen:
+                        h.cancel()
+                        frozen[i] = list(h.tokens)
+                return cb
+            h.on_token(make_cb())
+        handles.append(h)
+    outs = eng.run()
+    assert sorted(c.id for c in outs) == list(range(n_req)), \
+        "request lost or duplicated"
+    for h, c in zip(handles, sorted(outs, key=lambda c: c.id)):
+        if c.finish_reason == "cancelled":
+            assert h.tokens == frozen[c.id], \
+                "token emitted after cancel() returned"
+        elif c.finish_reason == "length":
+            assert len(c.tokens) == h.request.max_new_tokens
+    sched = eng.scheduler
+    assert sched.done
+    assert sched.alloc.in_use == 0, "leaked blocks"
+    assert sched.alloc.available == sched.alloc.capacity
+    assert not sched.block_tables.any()
+    assert sorted(sched.free) == list(range(max_slots)), "slot leak"
+    lay = sched.layout
+    assert not lay._prefix_full and not lay._prefix_partial
+    assert not lay._block_keys, "prefix index outlived its blocks"
+    assert not lay._slot_blocks and not lay._table_pending

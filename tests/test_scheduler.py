@@ -2,14 +2,16 @@
 
 * admission/eviction ordering — FIFO admission, slots freed on eviction
   and reused by later requests;
-* KV-slot reuse correctness — the shared-slot decode batch emits exactly
-  the static-bucket path's greedy tokens, across mixed prompt lengths,
-  eos stops and slot churn;
-* paged KV cache + chunked prefill — every layout/admission combination
-  (paged, chunked, paged+chunked, oversubscribed pool with growth
-  preemption) stays token-identical to the static path, admission waits
-  instead of over-committing the pool, and block accounting balances
-  (freed exactly once) across evict/fail/preempt;
+* paged KV mechanics — admission waits instead of over-committing the
+  pool, growth can preempt an in-flight chunked prefill, block
+  accounting balances across evict/fail/preempt (token identity against
+  the static oracle for every layout/policy combination lives in
+  tests/test_conformance_matrix.py);
+* prefix sharing — admissions with a common prompt prefix map the same
+  physical blocks (observable refcounts), eviction releases references
+  rather than freeing shared blocks, the prefix index dies with its
+  blocks, and the copy-on-write growth guard gives a writer a private
+  copy;
 * pipelined modeled clocks — per-unit start times are monotone, every
   firing respects data availability, and the pipelined makespan beats
   sequential execution of the same stages while staying >= the bottleneck
@@ -55,75 +57,12 @@ def _mixed_requests(cfg, specs, seed=0):
 
 
 # ---------------------------------------------------------------------------
-# KV-slot reuse correctness
-# ---------------------------------------------------------------------------
-
-def test_continuous_matches_static_bucket_tokens(setup):
-    """More requests than slots, four distinct prompt lengths, varying
-    decode lengths: the slot-reusing shared batch must emit the exact
-    greedy tokens of the per-bucket baseline."""
-    cfg, params = setup
-    reqs = _mixed_requests(cfg, [(8, 6), (12, 4), (8, 9), (5, 1), (12, 7),
-                                 (16, 5), (7, 3), (9, 8), (8, 2), (16, 6)])
-    static = ServeEngine(cfg, params, max_len=64).generate(reqs)
-    cont = ServeEngine(cfg, params, max_len=64, mode="continuous",
-                       max_slots=4).generate(reqs)
-    assert [c.id for c in cont] == [s.id for s in static]
-    for s, c in zip(static, cont):
-        assert c.tokens == s.tokens, f"request {s.id} diverged"
-
-
-def test_continuous_respects_eos(setup):
-    cfg, params = setup
-    reqs = _mixed_requests(cfg, [(8, 12), (10, 12), (6, 12)])
-    static = ServeEngine(cfg, params, max_len=64).generate(reqs)
-    # pick an eos that actually occurs mid-stream for request 0
-    eos = static[0].tokens[3]
-    for r in reqs:
-        r.eos = eos
-    s2 = ServeEngine(cfg, params, max_len=64).generate(reqs)
-    c2 = ServeEngine(cfg, params, max_len=64, mode="continuous",
-                     max_slots=2).generate(reqs)
-    assert [c.tokens for c in c2] == [s.tokens for s in s2]
-    assert len(s2[0].tokens) < 12   # eos actually truncated
-
-
-# ---------------------------------------------------------------------------
 # paged KV cache + chunked prefill
+# (greedy-identity cells live in tests/test_conformance_matrix.py)
 # ---------------------------------------------------------------------------
 
 MIXED_SPECS = [(8, 6), (12, 4), (8, 9), (5, 1), (12, 7),
                (16, 5), (7, 3), (9, 8), (8, 2), (16, 6)]
-
-
-@pytest.mark.parametrize("kw", [
-    dict(paged=True, block_size=8),
-    dict(prefill_chunk=4),
-    dict(paged=True, block_size=8, prefill_chunk=4),
-    dict(paged=True, block_size=4, num_blocks=16),   # oversubscribed pool
-], ids=["paged", "chunked", "paged+chunked", "paged-tight"])
-def test_paged_and_chunked_match_static_tokens(setup, kw):
-    """Every cache-layout/admission combination — paged blocks, chunked
-    prefill, both, and an oversubscribed pool that forces growth
-    preemption — must emit the static-bucket path's exact greedy tokens,
-    with slot/block invariants asserted at every step boundary."""
-    cfg, params = setup
-    reqs = _mixed_requests(cfg, MIXED_SPECS)
-    static = ServeEngine(cfg, params, max_len=64).generate(reqs)
-    sched = ContinuousScheduler(
-        cfg, params, SchedulerConfig(max_slots=4, max_len=64, debug=True,
-                                     **kw))
-    for r in reqs:
-        sched.submit(r)
-    outs = sched.run()
-    assert [c.id for c in outs] == [s.id for s in static]
-    for s, c in zip(static, outs):
-        assert c.tokens == s.tokens, f"request {s.id} diverged"
-    if kw.get("paged"):
-        # every block returned to the pool exactly once
-        assert sched.alloc.in_use == 0
-        assert sched.alloc.available == sched.alloc.capacity
-        assert not sched.block_tables.any()
 
 
 def test_paged_admission_waits_when_pool_exhausted(setup):
@@ -189,24 +128,6 @@ def test_paged_rejects_configs_with_no_global_attention(setup):
     with pytest.raises(ValueError, match="paged KV cache pages"):
         ContinuousScheduler(local, params,
                             SchedulerConfig(max_slots=2, paged=True))
-
-
-def test_chunked_prefill_matches_one_shot(setup):
-    """Chunked admission is a pure scheduling change: the same workload
-    prefilled 4 tokens at a time must emit the one-shot path's exact
-    greedy tokens (and actually run chunked: prompts longer than one
-    chunk, interleaved with live decodes)."""
-    cfg, params = setup
-    one_shot = ContinuousScheduler(
-        cfg, params, SchedulerConfig(max_slots=3, max_len=64))
-    chunked = ContinuousScheduler(
-        cfg, params, SchedulerConfig(max_slots=3, max_len=64,
-                                     prefill_chunk=4, debug=True))
-    for sched in (one_shot, chunked):
-        for r in _mixed_requests(cfg, MIXED_SPECS):
-            sched.submit(r)
-    a, b = one_shot.run(), chunked.run()
-    assert [c.tokens for c in a] == [c.tokens for c in b]
 
 
 def test_evicted_slot_state_is_zeroed(setup):
@@ -396,6 +317,194 @@ def test_whole_unit_failure_requeues_every_active_request(setup):
     fails = [e for e in sched.events if e.kind == "fail"]
     assert len(fails) == 4
     assert [c.tokens for c in out] == [c.tokens for c in ref]
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing (paged copy-on-write)
+# ---------------------------------------------------------------------------
+
+def _prefix_sched(cfg, params, **kw):
+    base = dict(max_slots=2, max_len=32, paged=True, block_size=4,
+                prefix_cache=True, debug=True)
+    base.update(kw)
+    return ContinuousScheduler(cfg, params, SchedulerConfig(**base))
+
+
+def test_prefix_sharing_maps_same_blocks(setup):
+    """Two concurrently-admitted requests with a common prompt prefix
+    share physical blocks: identical table entries for the matched
+    pages, refcount 2 on each, and the matched rows never re-prefill."""
+    cfg, params = setup
+    rng = np.random.RandomState(0)
+    head = rng.randint(0, cfg.vocab_size, 14).astype(np.int32)
+    tail = rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
+    sched = _prefix_sched(cfg, params)
+    sched.submit(Request(0, head, max_new_tokens=6))
+    sched.submit(Request(1, np.concatenate([head, tail]), max_new_tokens=6))
+    sched.step_once()                   # one admission pass: 0 then 1
+    s0, s1 = sched.block_tables[0], sched.block_tables[1]
+    # request 1 matched request 0's whole prompt (14 rows: 3 full pages
+    # shared, the partial tail seeded through the scratch)
+    assert (s0[:3] == s1[:3]).all() and s0[:3].all(), (s0, s1)
+    for blk in s1[:3]:
+        assert sched.alloc.refcount(int(blk)) == 2
+    assert s0[3] != s1[3], "partial tail block must be private (COW)"
+    st = sched.stats()
+    assert st["prefix_hits"] == 1
+    assert st["prefill_tokens_saved"] == 14
+    sched.run()
+    assert sched.alloc.in_use == 0
+    assert not sched.layout._prefix_full and not sched.layout._prefix_partial
+    assert not sched.layout._block_keys, "index outlived its blocks"
+
+
+def test_prefix_match_variants(setup):
+    """The index matches what it may and nothing more: block-aligned
+    chains, whole-prompt partial tails (capped at len-1 so admission
+    still has logits to sample from), and no false positives on
+    divergent or too-short prompts."""
+    cfg, params = setup
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, 14).astype(np.int32)
+    aligned = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+    sched = _prefix_sched(cfg, params)
+    sched.submit(Request(0, prompt, max_new_tokens=8))
+    sched.submit(Request(1, aligned, max_new_tokens=8))
+    sched.step_once()                   # both admitted, still decoding
+    lay = sched.layout
+    # exact duplicate of the 14-token prompt: the partial tail entry is
+    # as long as the whole prompt, so only the full chain matches (the
+    # last token is always recomputed for its logits)
+    src, matched = lay.match_prefix(prompt.copy())
+    assert matched == 12 and len(src) == 3
+    # exact duplicate of the block-aligned prompt: the final full block
+    # covers the whole prompt, so the match caps at len - 1 and the
+    # boundary block is seeded-from, never table-shared
+    src, matched = lay.match_prefix(aligned.copy())
+    assert matched == 15 and len(src) == 4
+    # same aligned prefix, divergent tail: full blocks only
+    div = np.concatenate([prompt[:12], (prompt[12:14] + 1) % cfg.vocab_size])
+    src, matched = lay.match_prefix(div)
+    assert matched == 12 and len(src) == 3
+    # longer prompt continuing the resident one: chain + partial tail
+    longer = np.concatenate([prompt, prompt[:5]])
+    src, matched = lay.match_prefix(longer)
+    assert matched == 14 and len(src) == 4
+    # divergence inside the first block: no match
+    bad = prompt.copy()
+    bad[0] = (bad[0] + 1) % cfg.vocab_size
+    assert lay.match_prefix(bad) == ([], 0)
+    # a strict prefix of the resident prompt: full blocks only (partial
+    # tails are keyed by the whole resident prompt)
+    src, matched = lay.match_prefix(prompt[:13].copy())
+    assert matched == 12 and len(src) == 3
+    sched.run()
+
+
+def test_eviction_releases_references_not_shared_blocks(setup):
+    """Cancelling the request that *created* a shared chain must not
+    free the blocks out from under the survivor: references release one
+    by one, the block comes home only at refcount 0, and the survivor's
+    tokens stay bit-identical to the static path."""
+    cfg, params = setup
+    rng = np.random.RandomState(2)
+    head = rng.randint(0, cfg.vocab_size, 12).astype(np.int32)
+    tail = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    reqs = [Request(0, head, max_new_tokens=12),
+            Request(1, np.concatenate([head, tail]), max_new_tokens=8)]
+    static = ServeEngine(cfg, params, max_len=32).generate(
+        [Request(r.id, r.prompt, max_new_tokens=r.max_new_tokens)
+         for r in reqs])
+    sched = _prefix_sched(cfg, params)
+    t0 = sched.submit(reqs[0])
+    sched.submit(reqs[1])
+    sched.step_once()
+    shared = [int(b) for b in sched.block_tables[1][:3]]
+    assert all(sched.alloc.refcount(b) == 2 for b in shared)
+    sched.request_cancel(t0)            # creator goes away mid-decode
+    sched.step_once()
+    assert all(sched.alloc.refcount(b) == 1 for b in shared), \
+        "survivor lost its shared blocks"
+    outs = {c.id: c for c in sched.run()}
+    assert outs[1].tokens == static[1].tokens
+    assert sched.alloc.in_use == 0
+
+
+def test_grow_one_copy_on_write_gives_private_copy(setup):
+    """The defensive COW guard on decode growth: a write targeting a
+    block with refcount > 1 allocates a fresh block, copies the rows,
+    swaps the table entry and drops one reference — the original block
+    and its other reader are untouched."""
+    cfg, params = setup
+    rng = np.random.RandomState(3)
+    sched = _prefix_sched(cfg, params)
+    sched.submit(Request(0, rng.randint(0, cfg.vocab_size, 8)
+                         .astype(np.int32), max_new_tokens=4))
+    sched.step_once()
+    lay = sched.layout
+    old = int(sched.block_tables[0][1])
+    lay.alloc.share([old])              # simulate a second reader
+    assert lay.needs_block(0, 5)        # pos 5 -> page 1, shared
+    assert lay.grow_one(0, 5)
+    new = int(sched.block_tables[0][1])
+    assert new != old
+    assert lay.alloc.refcount(old) == 1 and lay.alloc.refcount(new) == 1
+    k = np.asarray(lay.cache["scan"][0]["k"])
+    assert np.array_equal(k[:, old], k[:, new]), "COW did not copy rows"
+    assert old not in lay._slot_blocks[0] and new in lay._slot_blocks[0]
+    lay._unregister(lay.alloc.release([old]))   # drop the simulated reader
+    outs = sched.run()
+    assert len(outs[0].tokens) == 4
+    assert sched.alloc.in_use == 0
+
+
+def test_prefix_seed_with_non_block_multiple_max_len(setup):
+    """max_len is rounded up to a whole number of blocks in paged mode,
+    so seeding a matched prefix whole-pages-at-a-time always fits the
+    scratch cache — even when the configured max_len isn't a block
+    multiple and the match ends mid-page (the near-miss shape: pages *
+    block_size > configured max_len)."""
+    cfg, params = setup
+    rng = np.random.RandomState(5)
+    head = rng.randint(0, cfg.vocab_size, 18).astype(np.int32)
+    sched = _prefix_sched(cfg, params, max_len=20, block_size=8,
+                          max_slots=2)
+    assert sched.max_len == 24          # rounded up from 20
+    static = ServeEngine(cfg, params, max_len=24).generate(
+        [Request(0, head, max_new_tokens=2),
+         Request(1, np.concatenate([head, head[:1]]), max_new_tokens=2)])
+    sched.submit(Request(0, head, max_new_tokens=2))
+    # 19-token prompt matching all 18 resident rows: seeds ceil(18/8)=3
+    # whole pages = 24 rows, exactly the rounded scratch length
+    sched.submit(Request(1, np.concatenate([head, head[:1]]),
+                         max_new_tokens=2))
+    outs = sched.run()
+    assert [c.tokens for c in outs] == [s.tokens for s in static]
+    assert sched.stats()["prefix_hits"] == 1
+    assert sched.alloc.in_use == 0
+
+
+def test_prefix_cache_silently_disabled_without_extend_support(setup):
+    """Configs outside supports_chunked_prefill can't resume mid-prompt;
+    prefix_cache degrades to plain paged serving instead of erroring
+    (mirroring prefill_chunk's fallback)."""
+    cfg, params = setup
+    import dataclasses
+    mixed = dataclasses.replace(cfg, layer_pattern=("attn", "attn_local"),
+                                window=8)
+    mixed_params = T.init_params(mixed, KEY)
+    sched = ContinuousScheduler(
+        mixed, mixed_params,
+        SchedulerConfig(max_slots=2, max_len=32, paged=True, block_size=4,
+                        prefix_cache=True, debug=True))
+    assert not sched.layout.prefix_cache
+    rng = np.random.RandomState(4)
+    head = rng.randint(0, mixed.vocab_size, 8).astype(np.int32)
+    for i in range(2):
+        sched.submit(Request(i, head.copy(), max_new_tokens=3))
+    outs = sched.run()
+    assert [len(o.tokens) for o in outs] == [3, 3]
+    assert sched.stats()["prefix_hits"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,153 @@
+"""Regression suite for the deprecated ``ServeEngine`` shim.
+
+The shim's whole contract is "legacy call sites keep working unchanged
+until removal": every legacy kwarg maps onto the ``EngineConfig`` field
+the migration table names, the legacy mode-conditional ``ValueError``s
+fire with their original messages, and construction emits exactly one
+``DeprecationWarning`` naming the replacement. These used to be
+exercised only incidentally (old tests, examples); pinning them here
+means the shim can't silently drift while it lives.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.policies import BatchAdmission, FifoAdmission
+from repro.runtime.scheduler import Request
+from repro.runtime.serving import ServeEngine
+
+
+def _tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, specs, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(i, rng.randint(0, cfg.vocab_size, p).astype(np.int32),
+                    max_new_tokens=m) for i, (p, m) in enumerate(specs)]
+
+
+SPECS = [(8, 6), (12, 4), (8, 9), (5, 1)]
+
+
+def test_shim_warns_exactly_once_with_migration_pointer(setup):
+    cfg, params = setup
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ServeEngine(cfg, params, max_len=64)
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, "construction must warn exactly once"
+    msg = str(deps[0].message)
+    # the warning is the migration doc: it must name the replacement and
+    # the kwarg mapping
+    for needle in ("ServeEngine is deprecated", "EngineConfig",
+                   "admission='batch'", "admission='fifo'",
+                   "kv_layout='paged'"):
+        assert needle in msg, f"warning lost its pointer: {needle!r}"
+    assert deps[0].filename == __file__, \
+        "stacklevel must point at the caller, not the shim"
+
+
+@pytest.mark.parametrize("legacy_kw,expect", [
+    (dict(), dict(admission_cls=BatchAdmission, kv_layout="slotted")),
+    (dict(mode="static-bucket"), dict(admission_cls=BatchAdmission)),
+    (dict(mode="continuous", max_slots=3),
+     dict(admission_cls=FifoAdmission, max_slots=3)),
+    (dict(mode="continuous", paged=True, block_size=8, num_blocks=20,
+          watermark=2),
+     dict(kv_layout="paged", block_size=8, num_blocks=20, watermark=2)),
+    (dict(mode="continuous", prefill_chunk=4), dict(prefill_chunk=4)),
+    (dict(greedy=False, temperature=0.7, seed=5),
+     dict(greedy=False, temperature=0.7, seed=5)),
+], ids=["default", "static", "continuous", "paged", "chunked", "sampling"])
+def test_legacy_kwargs_map_onto_engine_config(setup, legacy_kw, expect):
+    """Field-by-field: the shim builds the Engine the migration table
+    promises for each legacy kwarg spelling."""
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning):
+        shim = ServeEngine(cfg, params, max_len=48, **legacy_kw)
+    ec = shim.engine.config
+    assert ec.max_len == 48
+    for key, val in expect.items():
+        if key == "admission_cls":
+            assert isinstance(shim.engine.admission, val)
+        else:
+            assert getattr(ec, key) == val, key
+    # the shim exposes the legacy attribute surface
+    assert shim.cfg is cfg and shim.params is params
+    assert shim.scheduler is shim.engine.scheduler
+
+
+def test_shim_output_matches_new_facade(setup):
+    cfg, params = setup
+    reqs = _reqs(cfg, SPECS)
+    ref = Engine(cfg, params, EngineConfig(max_len=64, admission="batch")) \
+        .generate(reqs)
+    with pytest.warns(DeprecationWarning):
+        legacy_static = ServeEngine(cfg, params, max_len=64)
+    with pytest.warns(DeprecationWarning):
+        legacy_paged = ServeEngine(cfg, params, max_len=64,
+                                   mode="continuous", max_slots=2,
+                                   paged=True, block_size=8)
+    assert [c.tokens for c in legacy_static.generate(reqs)] == \
+        [c.tokens for c in ref]
+    assert [c.tokens for c in legacy_paged.generate(reqs)] == \
+        [c.tokens for c in ref]
+
+
+def test_legacy_value_errors_preserved(setup):
+    """The original mode-conditional errors, verbatim triggers: callers
+    relying on them (and on their messages) must see identical
+    behavior."""
+    cfg, params = setup
+    reqs = _reqs(cfg, SPECS[:2])
+    with pytest.raises(ValueError, match="mode 'bogus' not in"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(cfg, params, mode="bogus")
+    with pytest.raises(ValueError, match="require .*mode='continuous'"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(cfg, params, paged=True)
+    with pytest.raises(ValueError, match="require .*mode='continuous'"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(cfg, params, prefill_chunk=4)
+    with pytest.warns(DeprecationWarning):
+        static = ServeEngine(cfg, params, max_len=64)
+    with pytest.raises(ValueError, match="arrivals requires "
+                                         "mode='continuous'"):
+        static.generate(reqs, arrivals=[0.0, 0.0])
+    with pytest.raises(ValueError, match="on_completion requires "
+                                         "mode='continuous'"):
+        static.generate(reqs, on_completion=lambda c: None)
+    # continuous mode accepts both (no spurious new errors)
+    with pytest.warns(DeprecationWarning):
+        cont = ServeEngine(cfg, params, max_len=64, mode="continuous",
+                           max_slots=2)
+    seen = []
+    outs = cont.generate(reqs, arrivals=[0.0, 0.0],
+                         on_completion=seen.append)
+    assert len(outs) == len(reqs) and len(seen) == len(reqs)
+
+
+def test_shim_rejects_oversized_requests_like_engine(setup):
+    """Admission validation flows through the shim unchanged."""
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(cfg, params, max_len=16)
+    with pytest.raises(ValueError, match="exceeding max_len"):
+        eng.generate([Request(0, np.zeros(14, np.int32), max_new_tokens=8)])
