@@ -1,0 +1,328 @@
+"""Concurrent wall-clock load generator for the HTTP serving front end.
+
+Where ``serving_bench.py`` measures the engine in-process on modeled
+arrival clocks, this bench drives the *whole serving stack* — HTTP
+parse, bounded admission, background drain thread, chunked streaming —
+from real concurrent connections at Poisson arrival rates, and records
+the numbers that matter to a serving operator:
+
+* **TTFT p50/p99** — wall-clock time from sending the request to the
+  first streamed token line arriving on the socket;
+* **inter-token p50/p99** — gaps between successive token lines;
+* **throughput** — generated tokens per wall-clock second across the
+  whole run;
+* **shed rate** — the fraction of requests the server refused (429
+  backpressure) or expired (``finish_reason="timeout"`` under
+  ``--enforce-deadlines``) instead of serving late.
+
+The result is persisted as JSON (``BENCH_serving.json``) so the serving
+perf trajectory is recorded in-repo and regression-gated: ``--baseline``
+compares TTFT p99 against a committed run and exits non-zero past
+``--max-regression`` (CI nightly gate).
+
+By default the bench self-hosts an ``EngineServer`` on a tiny model and
+an ephemeral port (so it runs anywhere, CI included); ``--url`` points
+it at an external live server instead.
+
+``python benchmarks/load_bench.py --tiny --out BENCH_serving.json`` is
+the CI entrypoint. A fraction of the tiny trace carries tight deadlines
+on purpose: the recorded run demonstrates timeout shedding under
+contention, while every *non-shed* request must complete cleanly (the
+bench exits non-zero otherwise).
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional
+from urllib.parse import urlparse
+
+import numpy as np
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0}
+    return {"p50": float(np.percentile(xs, 50)),
+            "p99": float(np.percentile(xs, 99))}
+
+
+class _Result:
+    __slots__ = ("id", "status", "ttft_s", "gaps_s", "n_tokens",
+                 "finish_reason", "error")
+
+    def __init__(self, id):
+        self.id = id
+        self.status = 0
+        self.ttft_s = None
+        self.gaps_s: List[float] = []
+        self.n_tokens = 0
+        self.finish_reason = None
+        self.error = None
+
+
+def _run_one(host: str, port: int, body: Dict[str, Any],
+             res: _Result) -> None:
+    """One streamed /generate over a fresh connection; fills ``res``
+    with per-line wall-clock timings (HTTPResponse decodes the chunked
+    framing transparently, so readline() returns one NDJSON line per
+    token the moment its chunk lands)."""
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    try:
+        t_send = time.perf_counter()
+        conn.request("POST", "/generate", json.dumps(body),
+                     {"Content-Type": "application/json"})
+        r = conn.getresponse()
+        res.status = r.status
+        if r.status != 200:
+            r.read()
+            return
+        prev = None
+        while True:
+            line = r.readline()
+            if not line:
+                break
+            line = line.strip()
+            if not line:
+                continue
+            now = time.perf_counter()
+            obj = json.loads(line)
+            if "token" in obj:
+                if res.ttft_s is None:
+                    res.ttft_s = now - t_send
+                elif prev is not None:
+                    res.gaps_s.append(now - prev)
+                prev = now
+                res.n_tokens += 1
+            if obj.get("done"):
+                res.finish_reason = obj["finish_reason"]
+    except Exception as e:               # noqa: BLE001 — recorded, not fatal
+        res.error = f"{type(e).__name__}: {e}"
+    finally:
+        conn.close()
+
+
+def _worker(host: str, port: int, jobs: List[tuple], t0: float,
+            results: List[_Result]) -> None:
+    """Serve this worker's slice of the global Poisson schedule: sleep
+    until each arrival instant, fire, stream to completion. A worker
+    that falls behind fires late (open-loop degradation under overload —
+    exactly what the deadline shed path is for)."""
+    for at_s, rid, body in jobs:
+        delay = t0 + at_s - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        res = _Result(rid)
+        _run_one(host, port, body, res)
+        results.append(res)
+
+
+def _poisson_schedule(n: int, rate_per_s: float, seed: int) -> List[float]:
+    rng = np.random.RandomState(seed)
+    return list(np.cumsum(rng.exponential(1.0 / rate_per_s, size=n)))
+
+
+def _make_bodies(n: int, *, vocab: int, max_new: int, deadline_s: float,
+                 deadline_every: int, seed: int) -> List[Dict[str, Any]]:
+    """Mixed-length prompts; every ``deadline_every``-th request carries
+    a tight deadline so a contended trace sheds visibly."""
+    rng = np.random.RandomState(seed)
+    lens = (12, 16, 24, 32)
+    bodies = []
+    for i in range(n):
+        b = {"prompt": [int(t) for t in
+                        rng.randint(1, vocab, lens[i % len(lens)])],
+             "max_new_tokens": max_new, "stream": True}
+        if deadline_every and i % deadline_every == deadline_every - 1:
+            b["deadline_s"] = deadline_s
+        bodies.append(b)
+    return bodies
+
+
+def run_load(host: str, port: int, *, n: int, rate: float, max_new: int,
+             workers: int, deadline_s: float, deadline_every: int,
+             vocab: int, seed: int) -> Dict[str, Any]:
+    bodies = _make_bodies(n, vocab=vocab, max_new=max_new,
+                          deadline_s=deadline_s,
+                          deadline_every=deadline_every, seed=seed)
+    schedule = _poisson_schedule(n, rate, seed)
+    # round-robin the global schedule across workers: each worker's
+    # sub-schedule is increasing, so per-worker sequential dispatch
+    # preserves every arrival instant
+    slices: List[List[tuple]] = [[] for _ in range(workers)]
+    for i, (at, body) in enumerate(zip(schedule, bodies)):
+        slices[i % workers].append((at, i, body))
+    results: List[_Result] = []
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=_worker,
+                                args=(host, port, jobs, t0, results),
+                                daemon=True)
+               for jobs in slices if jobs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    ok = [r for r in results if r.status == 200
+          and r.finish_reason in ("eos", "length")]
+    timeouts = [r for r in results if r.finish_reason == "timeout"]
+    rejected = [r for r in results if r.status == 429]
+    failed = [r for r in results
+              if r not in ok and r not in timeouts and r not in rejected]
+    ttfts = [r.ttft_s for r in ok if r.ttft_s is not None]
+    gaps = [g for r in ok for g in r.gaps_s]
+    toks = sum(r.n_tokens for r in results)
+    return {
+        "requests": n,
+        "rate_per_s": rate,
+        "max_new_tokens": max_new,
+        "workers": workers,
+        "wall_s": wall,
+        "completed": len(ok),
+        "shed_timeout": len(timeouts),
+        "rejected_429": len(rejected),
+        "failed": len(failed),
+        "failed_detail": [
+            {"id": r.id, "status": r.status, "finish_reason": r.finish_reason,
+             "error": r.error} for r in failed],
+        "shed_rate": (len(timeouts) + len(rejected)) / max(n, 1),
+        "throughput_tok_per_s": toks / wall,
+        "ttft_s": _percentiles(ttfts),
+        "inter_token_s": _percentiles(gaps),
+    }
+
+
+# ---------------------------------------------------------------------------
+# self-hosted server (default) / external --url
+# ---------------------------------------------------------------------------
+
+
+def _self_hosted(args):
+    """Build the tiny EngineServer this bench drives when no --url is
+    given. Deadline enforcement is always on here — the recorded
+    trajectory is supposed to show the shed path working."""
+    import jax
+
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.runtime.engine import Engine, EngineConfig
+    from repro.runtime.server import EngineServer, ServerConfig
+
+    cfg = ModelConfig(
+        name="load-tiny", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ec = EngineConfig.from_args(
+        args, max_len=args.max_len,
+        admission=args.policy or "edf", enforce_deadlines=True,
+        max_slots=args.slots if args.slots != 8 else 2)
+    engine = Engine(cfg, params, ec)
+    return EngineServer(engine, ServerConfig(
+        port=0, max_inflight=args.max_inflight, max_new_cap=args.max_new))
+
+
+def main(argv=None) -> int:
+    from repro.runtime.engine import EngineConfig
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    EngineConfig.add_cli_args(ap)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run: small trace against the built-in "
+                         "tiny self-hosted server")
+    ap.add_argument("--url", default=None,
+                    help="drive an external live server instead of "
+                         "self-hosting (http://host:port)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="concurrent client connections")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-inflight", type=int, default=16,
+                    help="self-hosted server admission bound (429 past it)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="deadline carried by every N-th request (see "
+                         "--deadline-every); tight by default so the "
+                         "contended trace sheds visibly")
+    ap.add_argument("--deadline-every", type=int, default=4,
+                    help="every N-th request carries --deadline-s "
+                         "(0 = no deadlines)")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="write the result JSON here")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serving.json to regression-gate "
+                         "TTFT p99 against")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="fail if TTFT p99 exceeds baseline by more than "
+                         "this fraction")
+    args = ap.parse_args(argv)
+
+    n = args.requests or (24 if args.tiny else 200)
+    rate = args.rate or (30.0 if args.tiny else 50.0)
+    max_new = args.max_new or (8 if args.tiny else 32)
+    workers = args.workers or min(n, 12 if args.tiny else 64)
+    deadline_s = args.deadline_s if args.deadline_s is not None \
+        else (0.15 if args.tiny else 0.5)
+
+    if args.url:
+        u = urlparse(args.url)
+        host, port = u.hostname, u.port
+        srv = None
+    else:
+        srv = _self_hosted(args)
+        srv.start()
+        host, port = srv.config.host, srv.port
+
+    try:
+        print(f"load_bench: {n} requests @ {rate}/s, {workers} workers, "
+              f"max_new={max_new}, deadline={deadline_s}s every "
+              f"{args.deadline_every} -> {host}:{port}", flush=True)
+        out = run_load(host, port, n=n, rate=rate, max_new=max_new,
+                       workers=workers, deadline_s=deadline_s,
+                       deadline_every=args.deadline_every,
+                       vocab=256, seed=args.seed)
+        if srv is not None:
+            out["server_status"] = srv.status()
+    finally:
+        if srv is not None:
+            srv.close()
+
+    print(json.dumps({k: v for k, v in out.items()
+                      if k not in ("failed_detail", "server_status")},
+                     indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+
+    rc = 0
+    if out["failed"]:
+        print(f"FAIL: {out['failed']} non-shed requests failed: "
+              f"{out['failed_detail']}", file=sys.stderr)
+        rc = 1
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        base_p99 = base["ttft_s"]["p99"]
+        cur_p99 = out["ttft_s"]["p99"]
+        limit = base_p99 * (1.0 + args.max_regression)
+        print(f"TTFT p99: {cur_p99 * 1e3:.1f} ms vs baseline "
+              f"{base_p99 * 1e3:.1f} ms (limit {limit * 1e3:.1f} ms)")
+        if cur_p99 > limit:
+            print(f"FAIL: TTFT p99 regressed past "
+                  f"{args.max_regression:.0%}", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

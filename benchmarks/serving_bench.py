@@ -342,6 +342,11 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    # shared engine-policy flags (same registration as launch/serve.py,
+    # load_bench.py and runtime/server.py — no per-entry-point drift);
+    # this bench reads --paged / --watermark / --prefix-cache as "also
+    # measure that engine configuration on the same trace"
+    EngineConfig.add_cli_args(ap)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke config (small model, few requests)")
     ap.add_argument("--requests", type=int, default=None)
@@ -351,19 +356,6 @@ def main() -> None:
                          "open-loop workload")
     ap.add_argument("--seed", type=int, default=1,
                     help="arrival-process RNG seed (reproducible sweeps)")
-    ap.add_argument("--paged", action="store_true",
-                    help="also measure the paged + chunked-prefill engine "
-                         "vs the slotted baseline: KV pool / high-water "
-                         "bytes, Poisson TTFT p50/p99, preemption counts")
-    ap.add_argument("--watermark", type=int, default=0,
-                    help="paged admission watermark in blocks (growth "
-                         "headroom held back at admission; see "
-                         "EngineConfig.watermark)")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="also measure paged prefix sharing (copy-on-"
-                         "write) on a shared-prefix Poisson trace: "
-                         "prefill tokens saved, pool high-water and TTFT "
-                         "vs sharing off")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     args = ap.parse_args()

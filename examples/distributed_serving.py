@@ -13,17 +13,16 @@ of frame i+1 (Sec III.B).
 
 Run: PYTHONPATH=src python examples/distributed_serving.py
 """
-import warnings
-
 import jax
 import numpy as np
 
 from repro.core import Mapping, PlatformModel, paper_platform
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.runtime.engine import Engine, EngineConfig
-from repro.runtime.serving import (PartitionedServeEngine, Request,
-                                   ServeEngine)
+# repro.serving is the stable serving surface (Engine + lifecycle types);
+# the partitioned actor-graph engine stays a runtime.serving export
+from repro.runtime.serving import PartitionedServeEngine
+from repro.serving import Engine, EngineConfig, Request
 
 cfg = ModelConfig(
     name="serve-demo-60m", arch_type="dense", n_layers=6, d_model=256,
@@ -34,22 +33,19 @@ params = T.init_params(cfg, jax.random.PRNGKey(0))
 print(f"model: {cfg.name}, ~{cfg.param_count()/1e6:.1f}M params")
 
 # --- batched monolithic serving: static buckets vs continuous --------------
-# The legacy ServeEngine kwarg API still works through the deprecation
-# shim (this script doubles as the API-stability smoke in CI), and must
-# emit the exact tokens of the policy-based Engine it now wraps.
+# Both execution modes are one policy-configured Engine: admission=
+# "batch" is the seed static-bucket executor, the default fifo streams
+# through the continuous scheduler. (The legacy ServeEngine kwarg shim
+# still works with a DeprecationWarning — tests/test_serving_shim.py
+# covers it — but new code uses repro.serving.)
 rng = np.random.RandomState(0)
 reqs = [Request(i, rng.randint(0, cfg.vocab_size,
                                (32, 48)[i % 2]).astype(np.int32),
                 max_new_tokens=24) for i in range(8)]
-with warnings.catch_warnings(record=True) as caught:
-    warnings.simplefilter("always")
-    eng = ServeEngine(cfg, params, max_len=96)        # deprecated spelling
-assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
-    "the ServeEngine shim must warn"
+eng = Engine(cfg, params, EngineConfig(max_len=96, admission="batch"))
 outs = eng.generate(reqs)
 tput = sum(len(o.tokens) for o in outs) / sum(o.decode_s for o in outs)
-print(f"static-bucket (legacy shim): served {len(outs)} requests, "
-      f"~{tput:.1f} tok/s")
+print(f"static-bucket: served {len(outs)} requests, ~{tput:.1f} tok/s")
 print(f"req 0 continuation: {outs[0].tokens} ({outs[0].finish_reason})")
 
 cont = Engine(cfg, params, EngineConfig(max_len=96, max_slots=4))
@@ -77,6 +73,23 @@ admit_order = [e.request_id for e in life.scheduler.events
 print(f"lifecycle:     priority admit order {admit_order}, streamed "
       f"first token {first_hi}, cancelled req 100 after "
       f"{len(bg.tokens)} tokens")
+
+# wall-clock serving surface: a background drain thread pumps the
+# scheduler, callers just submit and wait; with enforce_deadlines an
+# expired request is shed as finish_reason="timeout" instead of served
+# late (runtime.server builds the HTTP front end on exactly this mode)
+wall = Engine(cfg, params, EngineConfig(max_len=96, max_slots=2,
+                                        admission="edf",
+                                        enforce_deadlines=True))
+with wall.start():
+    served = wall.submit(Request(200, reqs[0].prompt, max_new_tokens=12))
+    doomed = wall.submit(Request(201, reqs[1].prompt, max_new_tokens=12,
+                                 deadline_s=0.0))     # already expired
+    ok, shed = served.result(timeout=120), doomed.result(timeout=120)
+assert ok.finish_reason == "length" and shed.finish_reason == "timeout"
+print(f"background:    drain thread served req 200 ({len(ok.tokens)} "
+      f"tokens) and shed req 201 as '{shed.finish_reason}' "
+      f"({len(shed.tokens)} tokens emitted)")
 
 # --- Edge-PRUNE partitioned inference --------------------------------------
 g = T.to_actor_graph(cfg, params, batch=1, seq=48, group_size=2)

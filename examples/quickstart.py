@@ -1,4 +1,4 @@
-"""Quickstart: the Edge-PRUNE workflow end-to-end in ~60 lines.
+"""Quickstart: the Edge-PRUNE workflow end-to-end in ~80 lines.
 
 1. Express an application (the paper's vehicle-classification CNN) as a
    VR-PRUNE dataflow graph.
@@ -7,14 +7,20 @@
    paper's calibrated N2-i7 platform.
 4. Synthesize the best privacy-preserving mapping into a staged program —
    TX/RX channels auto-inserted — and run real inference through it.
+5. Serve an LLM workload through the stable ``repro.serving`` surface —
+   submit, stream tokens, get a ``Completion``.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import numpy as np
 
 from repro.core import (Explorer, Mapping, analyze, paper_platform,
                         synthesize)
+from repro.models import transformer as T
 from repro.models.cnn import vehicle_graph
+from repro.models.config import ModelConfig
+from repro.serving import Engine, EngineConfig, Request
 
 # 1. the application graph (actors = layer groups, edges = token FIFOs)
 g = vehicle_graph()
@@ -44,3 +50,18 @@ print(f"stages: {[s.unit for s in prog.stages]}, "
 img = np.random.RandomState(0).rand(96, 96, 3).astype(np.float32)
 out = prog.run_local({"Input": img})
 print(f"class probabilities: {np.asarray(out['L4-L5'][0]).round(3)}")
+
+# 5. LLM serving through the stable repro.serving surface: one Engine,
+# policy-configured (here the continuous scheduler, defaults); submit
+# returns a handle you can stream token by token
+cfg = ModelConfig(
+    name="quickstart-tiny", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+    param_dtype="float32", attn_chunk=16, remat=False)
+eng = Engine(cfg, T.init_params(cfg, jax.random.PRNGKey(0)),
+             EngineConfig(max_len=48, max_slots=2))
+prompt = np.random.RandomState(1).randint(0, 256, 16).astype(np.int32)
+handle = eng.submit(Request(id=0, prompt=prompt, max_new_tokens=8))
+streamed = list(handle.stream())        # pulls the engine step by step
+print(f"served {len(streamed)} tokens ({handle.finish_reason}): "
+      f"{streamed}")

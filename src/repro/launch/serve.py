@@ -90,41 +90,19 @@ def main() -> None:
     ap.add_argument("--partition", type=int, default=None,
                     help="also run Edge-PRUNE partitioned inference with "
                          "this many actors on the 'endpoint' unit")
-    ap.add_argument("--policy", default=None,
-                    choices=("batch", "fifo", "priority", "edf"),
-                    help="admission policy: 'batch' = static buckets "
-                         "(closed batch, the seed path); fifo/priority/edf "
-                         "stream through the continuous scheduler")
+    # shared engine-policy flags (one registration with serving_bench.py,
+    # load_bench.py, runtime/server.py — the surface can't drift)
+    EngineConfig.add_cli_args(ap)
     ap.add_argument("--mode", default=None,
                     choices=("static-bucket", "continuous"),
                     help="legacy spelling of --policy: static-bucket=batch, "
                          "continuous=fifo")
-    ap.add_argument("--preemption", default="evict-latest",
-                    choices=("evict-latest", "lowest-priority"),
-                    help="paged-pool preemption victim policy")
-    ap.add_argument("--slots", type=int, default=8,
-                    help="decode batch width (continuous policies)")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV cache: global-attn K/V in a shared "
-                         "block pool with per-slot block tables")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="share paged KV blocks between requests with a "
-                         "common prompt prefix (copy-on-write; implies "
-                         "--paged): matched prompts skip prefill for the "
-                         "resident region")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="KV rows per paged block")
-    ap.add_argument("--num-blocks", type=int, default=0,
-                    help="paged pool size in blocks (0 = parity with the "
-                         "slotted cache + the reserved null block)")
-    ap.add_argument("--watermark", type=int, default=0,
-                    help="paged admission watermark: keep this many blocks "
-                         "free beyond the prompt's need when admitting "
-                         "(growth headroom; damps preemption thrash)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="admit prompts this many tokens at a time, "
-                         "interleaved with decode steps (0 = one-shot "
-                         "prefill)")
+    ap.add_argument("--serve", action="store_true",
+                    help="instead of running the synthetic workload, start "
+                         "the HTTP front end (repro.runtime.server) over "
+                         "this engine and block")
+    ap.add_argument("--port", type=int, default=8800,
+                    help="--serve listen port")
     ap.add_argument("--trace", default=None,
                     help="JSONL request trace to replay against the real "
                          "clock (continuous policies; see module docstring)")
@@ -139,10 +117,12 @@ def main() -> None:
     if policy is None:
         policy = "batch"
     paged = args.paged or args.prefix_cache
-    if policy == "batch" and (paged or args.prefill_chunk or args.trace):
+    if policy == "batch" and (paged or args.prefill_chunk or args.trace
+                              or args.serve or args.enforce_deadlines):
         policy = "fifo"
-        print("# --paged/--prefix-cache/--prefill-chunk/--trace imply a "
-              "continuous admission policy (fifo)")
+        print("# --paged/--prefix-cache/--prefill-chunk/--trace/--serve/"
+              "--enforce-deadlines imply a continuous admission policy "
+              "(fifo)")
 
     cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -173,13 +153,24 @@ def main() -> None:
                                      cfg.frontend_dim).astype(np.float32)
             reqs.append(r)
         max_len = args.prompt_len + args.max_new + 8
-    eng = Engine(cfg, params, EngineConfig(
-        max_len=max_len, max_slots=args.slots,
-        kv_layout="paged" if paged else "slotted",
-        block_size=args.block_size, num_blocks=args.num_blocks,
-        watermark=args.watermark, prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache,
-        admission=policy, preemption=args.preemption))
+    eng = Engine(cfg, params,
+                 EngineConfig.from_args(args, max_len=max_len,
+                                        admission=policy))
+
+    if args.serve:
+        # HTTP front end over this engine/model; blocks until Ctrl-C.
+        import time as _time
+
+        from repro.runtime.server import EngineServer, ServerConfig
+        with EngineServer(eng, ServerConfig(port=args.port)) as srv:
+            print(f"# serving {cfg.name} on {srv.url} (policy={policy}, "
+                  f"layout={eng.config.kv_layout}); POST /generate, "
+                  f"GET /health/ready, GET /status", flush=True)
+            try:
+                while True:
+                    _time.sleep(3600)
+            except KeyboardInterrupt:
+                return
 
     if policy != "batch":
         # Streaming serve: completions print as they finish, admission

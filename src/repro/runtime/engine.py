@@ -25,16 +25,37 @@ checked against the static path in tests.
 ``submit()`` returns a ``RequestHandle``: the full request lifecycle —
 ``cancel()``, a per-token callback (``on_token``), a pull-based token
 iterator (``stream()``), and the final ``Completion`` with its
-``finish_reason`` (``"eos" | "length" | "cancelled" | "failed"``).
+``finish_reason``
+(``"eos" | "length" | "cancelled" | "failed" | "timeout"``).
+
+The engine serves callers on two clocks:
+
+* **caller-pumped** (the original surface): ``run()`` / ``step()`` /
+  ``RequestHandle.stream()`` advance the scheduler from the calling
+  thread — single-threaded, deterministic, what the benches and the
+  conformance tests drive;
+* **background-drained** (the wall-clock serving surface):
+  ``start()`` spawns a drain thread that pumps the scheduler whenever
+  work exists, so callers *never* step the engine themselves —
+  ``submit()``/``cancel()`` are thread-safe (one engine lock serializes
+  them against the drain loop), handles block on condition variables
+  instead of pumping, submissions are stamped with their wall-clock
+  arrival instant, and the ``asubmit()``/``astream()`` coroutines give
+  asyncio servers the same surface without blocking the event loop.
+  ``runtime.server`` builds the HTTP front end on exactly this mode.
 
 The legacy ``ServeEngine(mode=..., paged=...)`` kwarg surface lives on
-as a deprecation shim in ``runtime.serving``.
+as a deprecation shim in ``runtime.serving``; the stable public import
+path for all of the above is the ``repro.serving`` package.
 """
 from __future__ import annotations
 
+import asyncio
+import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import (Any, AsyncIterator, Callable, Dict, Iterator, List,
+                    Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -78,10 +99,75 @@ class EngineConfig:
     # policies: names resolved via runtime.policies, or instances
     admission: Any = "fifo"     # "fifo" | "priority" | "edf" | "batch"
     preemption: Any = "evict-latest"    # | "lowest-priority"
+    # wall-clock deadline enforcement: shed requests whose
+    # arrival_s + deadline_s instant passes (finish_reason="timeout")
+    # instead of only ordering by deadline (EDF). Continuous only.
+    enforce_deadlines: bool = False
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
     debug: bool = False         # step-boundary invariant asserts
+
+    # -- shared CLI construction (launch/serve.py, serving_bench.py,
+    #    load_bench.py, runtime/server.py all register the same flags,
+    #    so the policy surface can't drift between entry points) -------
+
+    @staticmethod
+    def add_cli_args(ap) -> None:
+        """Register the engine-policy flags on an argparse parser."""
+        ap.add_argument("--policy", default=None,
+                        choices=("batch", "fifo", "priority", "edf"),
+                        help="admission policy: 'batch' = static buckets "
+                             "(closed batch, the seed path); fifo/priority/"
+                             "edf stream through the continuous scheduler")
+        ap.add_argument("--preemption", default="evict-latest",
+                        choices=("evict-latest", "lowest-priority"),
+                        help="paged-pool preemption victim policy")
+        ap.add_argument("--slots", type=int, default=8,
+                        help="decode batch width (continuous policies)")
+        ap.add_argument("--paged", action="store_true",
+                        help="paged KV cache: global-attn K/V in a shared "
+                             "block pool with per-slot block tables")
+        ap.add_argument("--prefix-cache", action="store_true",
+                        help="share paged KV blocks between requests with a "
+                             "common prompt prefix (copy-on-write; implies "
+                             "--paged): matched prompts skip prefill for "
+                             "the resident region")
+        ap.add_argument("--block-size", type=int, default=16,
+                        help="KV rows per paged block")
+        ap.add_argument("--num-blocks", type=int, default=0,
+                        help="paged pool size in blocks (0 = parity with "
+                             "the slotted cache + the reserved null block)")
+        ap.add_argument("--watermark", type=int, default=0,
+                        help="paged admission watermark: keep this many "
+                             "blocks free beyond the prompt's need when "
+                             "admitting (growth headroom; damps preemption "
+                             "thrash)")
+        ap.add_argument("--prefill-chunk", type=int, default=0,
+                        help="admit prompts this many tokens at a time, "
+                             "interleaved with decode steps (0 = one-shot "
+                             "prefill)")
+        ap.add_argument("--enforce-deadlines", action="store_true",
+                        help="shed requests whose wall-clock deadline_s "
+                             "passes (finish_reason='timeout') instead of "
+                             "only ordering by deadline")
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "EngineConfig":
+        """Build an ``EngineConfig`` from ``add_cli_args`` flags.
+        ``overrides`` (e.g. ``max_len=...``, or a forced ``admission``)
+        win over the parsed flags."""
+        paged = args.paged or args.prefix_cache
+        kw = dict(
+            max_slots=args.slots,
+            kv_layout="paged" if paged else "slotted",
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            watermark=args.watermark, prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
+            admission=args.policy or "fifo", preemption=args.preemption,
+            enforce_deadlines=args.enforce_deadlines)
+        kw.update(overrides)
+        return cls(**kw)
 
 
 class RequestHandle:
@@ -101,8 +187,15 @@ class RequestHandle:
     * ``cancel()`` — after it returns, not one more token is emitted;
       the request completes with ``finish_reason="cancelled"`` (queued
       requests complete immediately with no tokens);
-    * ``result()`` — drive the engine until this request finishes and
-      return its ``Completion``.
+    * ``result()`` — block until this request finishes and return its
+      ``Completion`` (caller-pumped engines are driven step by step;
+      background-drained engines are waited on).
+
+    With a background drain thread running (``Engine.start()``) every
+    accessor is thread-safe: tokens/completion are published under a
+    condition variable, ``stream()``/``result()`` wait instead of
+    pumping, and ``aresult()``/``astream()`` expose the same waits as
+    coroutines for asyncio callers.
     """
 
     def __init__(self, engine: "Engine", request: Request):
@@ -113,6 +206,8 @@ class RequestHandle:
         self._callbacks: List[Callable[[int], None]] = []
         self._cancelled = False
         self._ticket = None         # continuous path only
+        self._cond = threading.Condition()
+        self._done_evt = threading.Event()
 
     @property
     def done(self) -> bool:
@@ -124,46 +219,106 @@ class RequestHandle:
 
     def cancel(self) -> None:
         """Flag the request for cancellation. Safe to call from inside a
-        token callback (the flag is checked before every emission) and
+        token callback (the flag is checked before every emission), from
+        any thread while the engine drains in the background, and
         idempotent; a no-op once the request has completed."""
         if self.completion is not None:
             return
         self._cancelled = True
         if self._ticket is not None:
-            self._engine.scheduler.request_cancel(self._ticket)
+            with self._engine._lock:
+                self._engine.scheduler.request_cancel(self._ticket)
 
     def on_token(self, cb: Callable[[int], None]) -> Callable[[int], None]:
         """Register a per-token callback; returns it (decorator-friendly)."""
         self._callbacks.append(cb)
         return cb
 
+    def _wait_progress(self, start: int, timeout: Optional[float] = None
+                       ) -> Tuple[List[int], bool]:
+        """Block until more than ``start`` tokens exist or the request
+        completed; returns (tokens past ``start``, done). Against a
+        background-drained engine this is a condition wait; against a
+        caller-pumped one it advances the engine a step instead."""
+        if self._engine.running:
+            def ready():
+                return len(self.tokens) > start or self.completion is not None
+            with self._cond:
+                if timeout is not None:
+                    self._cond.wait_for(ready, timeout)
+                else:
+                    # bounded waits so a shutdown() mid-request degrades
+                    # to caller-pumping on the next call, not a hang
+                    while not ready() and self._engine.running:
+                        self._cond.wait(0.1)
+                return list(self.tokens[start:]), self.completion is not None
+        if len(self.tokens) <= start and self.completion is None:
+            self._engine.step()
+        return list(self.tokens[start:]), self.completion is not None
+
     def stream(self) -> Iterator[int]:
-        """Yield tokens as the engine produces them. Single-threaded
-        pull: exhausting the iterator advances the engine step by step
-        (serving every other in-flight request along the way) until this
-        request finishes. Batch admission runs whole buckets per step, so
-        there the iterator yields each bucket's tokens in bursts."""
+        """Yield tokens as the engine produces them, until this request
+        finishes. Caller-pumped engines are advanced step by step
+        (serving every other in-flight request along the way); with a
+        background drain thread the iterator just waits for tokens.
+        Batch admission runs whole buckets per step, so there the
+        iterator yields each bucket's tokens in bursts."""
         i = 0
         while True:
-            while i < len(self.tokens):
-                yield self.tokens[i]
-                i += 1
-            if self.completion is not None:
+            toks, done = self._wait_progress(i)
+            for t in toks:
+                yield t
+            i += len(toks)
+            if done and i >= len(self.tokens):
                 return
-            self._engine.step()
 
-    def result(self) -> Completion:
-        """Drive the engine until this request completes."""
+    def result(self, timeout: Optional[float] = None) -> Completion:
+        """Block until this request completes and return its
+        ``Completion`` (driving the engine if nothing else does).
+        ``timeout`` (background mode) raises ``TimeoutError`` rather
+        than waiting forever on a stopped engine."""
+        if self._engine.running:
+            if timeout is not None:
+                if not self._done_evt.wait(timeout):
+                    raise TimeoutError(
+                        f"request {self.request.id} did not complete within "
+                        f"{timeout}s")
+                return self.completion
+            while self._engine.running and not self._done_evt.wait(0.1):
+                pass                # engine stopped mid-wait -> pump below
+            if self.completion is not None:
+                return self.completion
         while self.completion is None:
             self._engine.step()
         return self.completion
 
+    async def aresult(self) -> Completion:
+        """Asyncio variant of ``result()``: waits off the event loop."""
+        return await asyncio.get_running_loop().run_in_executor(
+            None, self.result)
+
+    async def astream(self) -> AsyncIterator[int]:
+        """Asyncio variant of ``stream()``: yields tokens as they are
+        produced without blocking the event loop."""
+        loop = asyncio.get_running_loop()
+        i = 0
+        while True:
+            toks, done = await loop.run_in_executor(
+                None, lambda: self._wait_progress(i, timeout=0.1))
+            for t in toks:
+                yield t
+            i += len(toks)
+            if done and i >= len(self.tokens):
+                return
+
     # -- engine-side hooks --------------------------------------------------
 
     def _emit(self, index: int, tok: int) -> None:
-        if index < len(self.tokens):
-            return              # failure-requeue replay of a streamed prefix
-        self.tokens.append(tok)
+        with self._cond:
+            if index < len(self.tokens):
+                return          # failure-requeue replay of a streamed prefix
+            self.tokens.append(tok)
+            self._cond.notify_all()
         for cb in self._callbacks:
             cb(tok)
 
@@ -171,21 +326,34 @@ class RequestHandle:
         """Failure re-queue under stochastic sampling: the re-decode
         resamples, so the streamed prefix is void — token callbacks fire
         again from index 0 for the new attempt."""
-        self.tokens = []
+        with self._cond:
+            self.tokens = []
 
     def _complete(self, c: Completion) -> None:
-        self.completion = c
+        with self._cond:
+            self.completion = c
+            self._cond.notify_all()
+        self._done_evt.set()
 
 
 class Engine:
     """Policy-based serving engine over one model + parameter set.
 
-    ``submit()`` / ``step()`` / ``run()`` is the lifecycle API;
-    ``generate()`` is the batch convenience wrapper (submit everything,
-    drain, return completions sorted by id). With a continuous admission
-    policy requests flow through the ``ContinuousScheduler``; with
-    ``admission="batch"`` the engine runs the seed static-bucket
-    executor — same facade, same handles, same ``finish_reason``."""
+    ``submit()`` / ``step()`` / ``run()`` is the caller-pumped lifecycle
+    API; ``generate()`` is the batch convenience wrapper (submit
+    everything, drain, return completions sorted by id). With a
+    continuous admission policy requests flow through the
+    ``ContinuousScheduler``; with ``admission="batch"`` the engine runs
+    the seed static-bucket executor — same facade, same handles, same
+    ``finish_reason``.
+
+    ``start()`` switches the engine to background-drained mode: a drain
+    thread pumps the scheduler whenever work exists, ``submit()`` /
+    ``cancel()`` become thread-safe (serialized by one engine lock) and
+    stamp wall-clock arrival instants, and handles wait on condition
+    variables instead of stepping. ``asubmit()``/``astream()`` wrap the
+    same surface for asyncio callers. ``shutdown()`` (or exiting the
+    engine's ``with`` block) stops the thread."""
 
     def __init__(self, cfg: ModelConfig, params: Any,
                  config: Optional[EngineConfig] = None, *,
@@ -203,6 +371,15 @@ class Engine:
         self.preemption = make_preemption(c.preemption)
         self.batch_mode = isinstance(self.admission, BatchAdmission)
         self.max_len = c.max_len
+        # one lock serializes submit/cancel/step against the drain
+        # thread; re-entrant so a cancel() fired from inside a token
+        # callback (already under the lock, inside a step) doesn't
+        # deadlock. Lock order is engine._lock -> handle._cond, never
+        # the inverse: handles wait on _cond without the engine lock.
+        self._lock = threading.RLock()
+        self._drain_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._work = threading.Event()      # set on submit, wakes the drain
         if self.batch_mode:
             if c.kv_layout != "slotted" or c.prefill_chunk:
                 raise ValueError(
@@ -213,6 +390,11 @@ class Engine:
                 raise ValueError(
                     "SlotFailure injection needs the continuous scheduler "
                     "(the static-bucket executor has no decode slots)")
+            if c.enforce_deadlines:
+                raise ValueError(
+                    "enforce_deadlines sheds on a wall clock the "
+                    "static-bucket executor doesn't run; it needs a "
+                    "continuous admission policy (fifo | priority | edf)")
             self.scheduler = None
             self.sampler = Sampler(greedy=c.greedy, temperature=c.temperature,
                                    seed=c.seed)
@@ -231,16 +413,76 @@ class Engine:
                     paged=c.kv_layout == "paged", block_size=c.block_size,
                     num_blocks=c.num_blocks, watermark=c.watermark,
                     prefill_chunk=c.prefill_chunk,
-                    prefix_cache=c.prefix_cache, debug=c.debug),
+                    prefix_cache=c.prefix_cache,
+                    enforce_deadlines=c.enforce_deadlines, debug=c.debug),
                 failures=failures, admission=self.admission,
                 preemption=self.preemption)
             self.sampler = self.scheduler.sampler
+
+    # -- background drain ---------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        """True while the background drain thread is alive."""
+        t = self._drain_thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "Engine":
+        """Spawn the background drain thread (continuous policies only).
+        After this, callers never pump: ``submit()`` wakes the drain,
+        handles wait for their tokens. Idempotent; returns self so
+        ``with Engine(...).start() as eng:`` reads naturally."""
+        if self.batch_mode:
+            raise ValueError(
+                "background draining steps the continuous scheduler; batch "
+                "admission runs closed buckets — call run() instead")
+        if self.running:
+            return self
+        self._stop.clear()
+        self._drain_thread = threading.Thread(
+            target=self._drain_loop, name="engine-drain", daemon=True)
+        self._drain_thread.start()
+        return self
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the drain thread. In-flight requests stay resident in
+        the scheduler and resume on the next ``start()`` / ``run()``;
+        ``wait=True`` joins the thread before returning."""
+        self._stop.set()
+        self._work.set()                    # unblock an idle drain loop
+        t = self._drain_thread
+        if wait and t is not None and t is not threading.current_thread():
+            t.join()
+        self._drain_thread = None
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def _drain_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                idle = self.scheduler.done
+                if not idle:
+                    self._work.clear()
+                    self.scheduler.step_once()
+            if idle:
+                # nothing live: sleep until a submit wakes us (the
+                # timeout keeps shutdown() prompt even if the set races)
+                self._work.wait(timeout=0.05)
+                self._work.clear()
 
     # -- lifecycle API ------------------------------------------------------
 
     def submit(self, req: Request, arrival_s: float = 0.0) -> RequestHandle:
         """Register a request (admitted at ``arrival_s`` seconds from
-        drain start under continuous policies) and return its handle."""
+        drain start under continuous policies) and return its handle.
+        Thread-safe; while the background drain runs, ``arrival_s=0``
+        submissions are stamped with the wall-clock *now* on the
+        scheduler's clock, so waiting-time metrics and deadlines measure
+        real elapsed time, not time since the server booted."""
         handle = RequestHandle(self, req)
         if self.batch_mode:
             if arrival_s:
@@ -249,30 +491,68 @@ class Engine:
                     "a continuous admission policy (fifo | priority | edf)")
             validate_request_fits(self.cfg, req, self.max_len)
             self._pending.append(handle)
-        else:
-            handle._ticket = self.scheduler.submit(req, arrival_s)
+            return handle
+        with self._lock:
+            s = self.scheduler
+            if (self.running and not arrival_s and s._t0 is not None
+                    and not s.done):
+                # mid-epoch wall-clock arrival (an idle/done scheduler
+                # starts a fresh epoch inside submit, where 0 is correct)
+                arrival_s = time.perf_counter() - s._t0
+            handle._ticket = s.submit(req, arrival_s)
             handle._ticket.handle = handle
+        self._work.set()
         return handle
 
     def step(self) -> List[Completion]:
         """Advance the engine: one scheduler iteration (continuous), or
         a full drain of the pending buckets (batch admission — buckets
         are closed, there is no smaller step). Returns the completions
-        this step produced."""
+        this step produced. Not available while the background drain
+        owns the scheduler — wait on handles instead."""
         if self.batch_mode:
             return self._run_static(None)
-        if self.scheduler.done:
-            return []
-        return self.scheduler.step_once()
+        if self.running and threading.current_thread() is not self._drain_thread:
+            raise RuntimeError(
+                "the background drain thread owns the step loop; wait on "
+                "RequestHandle.result()/stream() or shutdown() first")
+        with self._lock:
+            if self.scheduler.done:
+                return []
+            return self.scheduler.step_once()
 
     def run(self, on_completion: Optional[Callable[[Completion], None]] = None
             ) -> List[Completion]:
         """Drain every submitted request; completions sorted by id.
         ``on_completion`` streams each completion the moment its request
-        finishes."""
+        finishes. Not available while the background drain runs."""
         if self.batch_mode:
             return self._run_static(on_completion)
+        if self.running:
+            raise RuntimeError(
+                "the background drain thread owns the step loop; wait on "
+                "RequestHandle.result()/stream() or shutdown() first")
         return self.scheduler.run(on_completion)
+
+    # -- asyncio surface ----------------------------------------------------
+
+    async def asubmit(self, req: Request) -> RequestHandle:
+        """Asyncio submit: runs the (lock-taking, possibly briefly
+        contended) submission off the event loop. Requires the
+        background drain (``start()``) — an asyncio caller has no way
+        to pump a caller-driven engine without blocking the loop."""
+        if not self.running:
+            raise RuntimeError("asubmit() needs the background drain "
+                               "thread — call Engine.start() first")
+        return await asyncio.get_running_loop().run_in_executor(
+            None, self.submit, req)
+
+    async def astream(self, req: Request) -> AsyncIterator[int]:
+        """Submit + stream in one call: yields this request's tokens as
+        they are produced, without blocking the event loop."""
+        handle = await self.asubmit(req)
+        async for tok in handle.astream():
+            yield tok
 
     def generate(self, requests: List[Request], *,
                  arrivals: Optional[List[float]] = None,

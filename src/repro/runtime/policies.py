@@ -69,6 +69,18 @@ class Sampler:
 # exposes: .req (with .priority / .deadline_s), .arrival_s, .submit_seq.
 
 
+def request_due_s(ticket) -> float:
+    """Absolute due instant of a ticket on the engine clock (seconds
+    from drain start): ``arrival_s + Request.deadline_s``, or +inf for
+    background work without a deadline. One definition shared by EDF
+    admission *ordering* and the scheduler's wall-clock deadline
+    *enforcement* (``SchedulerConfig(enforce_deadlines=True)`` sheds a
+    request whose due instant passes — before prefill, or mid-decode —
+    completing it with ``finish_reason="timeout"``)."""
+    d = ticket.req.deadline_s
+    return ticket.arrival_s + d if d is not None else math.inf
+
+
 class FifoAdmission:
     """Arrival order; ties (equal arrival instants, e.g. a closed-loop
     batch submitted at t=0) break by submission order. Failure/preemption
@@ -101,9 +113,7 @@ class DeadlineAdmission:
     name = "edf"
 
     def key(self, ticket) -> tuple:
-        d = ticket.req.deadline_s
-        due = ticket.arrival_s + d if d is not None else math.inf
-        return (due, ticket.arrival_s, ticket.submit_seq)
+        return (request_due_s(ticket), ticket.arrival_s, ticket.submit_seq)
 
 
 class BatchAdmission:

@@ -53,7 +53,13 @@ half lives in ``runtime.policies``; the user-facing facade is
 * the request lifecycle — per-token streaming to a ``RequestHandle``,
   cancellation (a cancelled request never emits another token once
   ``cancel()`` returns), injected ``SlotFailure`` re-queue/terminate,
-  and a ``finish_reason`` on every ``Completion``.
+  and a ``finish_reason`` on every ``Completion``;
+* **wall-clock deadline enforcement**
+  (``SchedulerConfig(enforce_deadlines=True)``): EDF admission only
+  *orders* by deadline — enforcement additionally *sheds* a request
+  whose due instant (``policies.request_due_s``) passes, before prefill
+  or mid-decode, completing it with ``finish_reason="timeout"`` and
+  releasing its slot/blocks; a shed request never emits another token.
 
 Per-slot ``cache_len`` is what makes the shared batch sound: the decode
 attention masks every cache row at position >= cache_len[slot], so slots
@@ -82,7 +88,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.policies import (BatchAdmission, EvictLatest,
                                     FifoAdmission, Sampler, make_admission,
-                                    make_preemption, sample_tokens)
+                                    make_preemption, request_due_s,
+                                    sample_tokens)
 
 __all__ = [
     "Request", "Completion", "SchedulerConfig", "SchedEvent", "SlotFailure",
@@ -90,7 +97,7 @@ __all__ = [
     "sample_tokens", "validate_request_fits", "FINISH_REASONS",
 ]
 
-FINISH_REASONS = ("eos", "length", "cancelled", "failed")
+FINISH_REASONS = ("eos", "length", "cancelled", "failed", "timeout")
 
 
 @dataclass
@@ -120,7 +127,8 @@ class Completion:
     arrival_s: float = 0.0
     first_token_s: float = 0.0
     finish_s: float = 0.0
-    # why the request stopped: "eos" | "length" | "cancelled" | "failed"
+    # why the request stopped:
+    # "eos" | "length" | "cancelled" | "failed" | "timeout"
     finish_reason: str = "length"
     # times the request was re-queued (slot failure or pool preemption)
     restarts: int = 0
@@ -188,6 +196,13 @@ class SchedulerConfig:
     # configs outside supports_chunked_prefill (the mid-prompt resume
     # needs the position-indexed extend path).
     prefix_cache: bool = False
+    # wall-clock deadline ENFORCEMENT (EDF admission only *orders* by
+    # deadline): a request whose due instant (arrival_s + deadline_s,
+    # see policies.request_due_s) passes is shed at the next step
+    # boundary — retired from the waiting set before prefill, or evicted
+    # mid-decode — completing with finish_reason="timeout" and never
+    # emitting another token. Requests without a deadline are untouched.
+    enforce_deadlines: bool = False
     # assert slot/block accounting invariants at every step boundary
     debug: bool = False
 
@@ -195,7 +210,8 @@ class SchedulerConfig:
 @dataclass
 class SchedEvent:
     """Observable admission/eviction trace (asserted on by tests).
-    ``kind`` is "admit" | "evict" | "fail" | "preempt" | "cancel"."""
+    ``kind`` is "admit" | "evict" | "fail" | "preempt" | "cancel" |
+    "shed" (deadline enforcement timed the request out)."""
     t_s: float
     kind: str
     request_id: int
@@ -873,6 +889,11 @@ class ContinuousScheduler:
         self.step_count = 0
         self._t0: Optional[float] = None
         self._cancel_requests: List[_Ticket] = []   # via request_cancel()
+        # deadline enforcement: min-heap of (due_s, submit_seq, ticket)
+        # over live deadline-carrying tickets, so the per-boundary shed
+        # check is O(expired log n), not a scan of the waiting set.
+        # Entries for finished tickets are skipped lazily at the top.
+        self._deadline_heap: List[tuple] = []
 
     # -- legacy attribute surface (tests/benches reach for these) -----------
 
@@ -913,6 +934,9 @@ class ContinuousScheduler:
         self._submit_seq += 1
         self.backlog.append(ticket)
         self._backlog_dirty = True
+        if self.sched.enforce_deadlines and req.deadline_s is not None:
+            heapq.heappush(self._deadline_heap,
+                           (request_due_s(ticket), ticket.submit_seq, ticket))
         return ticket
 
     def request_cancel(self, ticket: _Ticket) -> None:
@@ -993,6 +1017,7 @@ class ContinuousScheduler:
             self._enqueue(self.backlog[self._backlog_pos])
             self._backlog_pos += 1
         done.extend(self._purge_cancelled(t0))
+        done.extend(self._shed_expired(t0))
         if (self._waiting() == 0 and not self.active
                 and self._chunking is None):
             if self._backlog_pos < len(self.backlog):
@@ -1024,7 +1049,8 @@ class ContinuousScheduler:
         c = Counter(e.kind for e in self.events)
         return {"admissions": c["admit"], "evictions": c["evict"],
                 "preemptions": c["preempt"], "slot_failures": c["fail"],
-                "cancellations": c["cancel"], "steps": self.step_count,
+                "cancellations": c["cancel"], "sheds": c["shed"],
+                "steps": self.step_count,
                 "prefix_hits": getattr(self.layout, "prefix_hits", 0),
                 "prefill_tokens_total": self.prefill_tokens_total,
                 "prefill_tokens_saved": self.prefill_tokens_saved}
@@ -1125,6 +1151,52 @@ class ContinuousScheduler:
                                       self.step_count))
         return self._finish(ticket, "cancelled", t0)
 
+    def _shed_expired(self, t0: float) -> List[Completion]:
+        """Deadline enforcement at a step boundary: complete every
+        live request whose due instant has passed with
+        ``finish_reason="timeout"``. A waiting request is retired in
+        place (never prefilled); an active one is evicted mid-decode —
+        its slot and (paged) block references are released, and with the
+        shed happening *before* the decode step, not one token is
+        emitted after it. A ticket mid-chunked-prefill releases its slot
+        and reserved blocks the same way. No-op unless the scheduler was
+        built with ``enforce_deadlines=True`` (the heap is only fed
+        then), so the conformance-matrix identity paths never pay for
+        this."""
+        out: List[Completion] = []
+        if not self._deadline_heap:
+            return out
+        now = time.perf_counter() - t0
+        while self._deadline_heap and self._deadline_heap[0][0] <= now:
+            _, _, ticket = heapq.heappop(self._deadline_heap)
+            if ticket.where == "done" or ticket.cancelled:
+                continue                    # finished/cancelled first
+            if ticket.where == "backlog":
+                # due <= now implies arrival_s <= now, so arrivals have
+                # normally been delivered already — defensive only
+                self.backlog.remove(ticket)
+                out.append(self._shed_ticket(ticket, t0))
+            elif ticket.where == "queued":
+                ticket.retired = True       # lazy heap deletion
+                self._queue_stale += 1
+                out.append(self._shed_ticket(ticket, t0))
+            elif ticket.where == "active":
+                out.append(self._evict(ticket.slot, t0, "timeout",
+                                       kind="shed"))
+            elif ticket.where == "chunking":
+                st = self._chunking
+                self._chunking = None
+                self._release_slot(st.slot)
+                out.append(self._shed_ticket(ticket, t0, slot=st.slot))
+        return out
+
+    def _shed_ticket(self, ticket: _Ticket, t0: float,
+                     slot: int = -1) -> Completion:
+        now = time.perf_counter() - t0
+        self.events.append(SchedEvent(now, "shed", ticket.req.id, slot,
+                                      self.step_count))
+        return self._finish(ticket, "timeout", t0)
+
     def _retire_from_admission(self, ticket: _Ticket,
                                t0: float) -> Completion:
         """A cancel issued mid-admission-pass (from an earlier admitted
@@ -1213,6 +1285,13 @@ class ContinuousScheduler:
                 break
             if ticket.cancelled:
                 out.append(self._retire_from_admission(ticket, t0))
+                continue
+            if (self.sched.enforce_deadlines
+                    and request_due_s(ticket) <= time.perf_counter() - t0):
+                # expired while queued behind this pass's earlier
+                # prefills: shed before prefill, not after
+                heapq.heappop(self.queue)
+                out.append(self._shed_ticket(ticket, t0))
                 continue
             r = ticket.req
             chunked = self._chunk > 0 and r.embeds is None

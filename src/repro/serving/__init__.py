@@ -1,0 +1,36 @@
+"""Stable public serving surface.
+
+``repro.serving`` is the supported import path for everything a serving
+caller needs — the policy-configured ``Engine`` facade, its config, the
+request/handle/completion lifecycle types, the HTTP front end, and the
+closed set of ``finish_reason`` values:
+
+    from repro.serving import Engine, EngineConfig, Request
+
+    eng = Engine(cfg, params, EngineConfig(admission="fifo")).start()
+    handle = eng.submit(Request(id=0, prompt=prompt, max_new_tokens=32))
+    for tok in handle.stream():
+        ...
+
+Deep imports (``repro.runtime.engine``, ``repro.runtime.scheduler``)
+keep working — this package only re-exports — but docs and examples use
+this path so internal module reshuffles never break callers. The legacy
+``ServeEngine`` kwarg shim stays importable from ``repro.runtime.serving``
+with a ``DeprecationWarning``.
+"""
+from repro.runtime.engine import Engine, EngineConfig, RequestHandle
+from repro.runtime.scheduler import (FINISH_REASONS, Completion, Request,
+                                     SlotFailure)
+from repro.runtime.server import EngineServer, ServerConfig
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "Request",
+    "RequestHandle",
+    "Completion",
+    "SlotFailure",
+    "FINISH_REASONS",
+    "EngineServer",
+    "ServerConfig",
+]

@@ -1,0 +1,185 @@
+"""Wall-clock deadline enforcement: the shed path.
+
+EDF admission only *orders* by deadline; ``enforce_deadlines=True``
+additionally sheds a request whose absolute due instant
+(``arrival_s + deadline_s`` on the engine clock) passes, completing it
+with ``finish_reason="timeout"``. Covered here:
+
+* already expired at submit (``deadline_s=0``) — shed before prefill,
+  zero tokens;
+* expired while queued behind a long-running request on a contended
+  slot budget — shed without ever being admitted;
+* expired mid-decode — evicted from its active slot, stream frozen at
+  the shed instant, slot/blocks released;
+* paged layout: shed requests leak no blocks;
+* survivors of a contended shed trace stay greedy-token-identical to
+  the static-bucket oracle run of the same surviving set;
+* enforcement off (the default) keeps deadlines order-only — nothing
+  sheds, which is what every pre-existing EDF test relies on.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.scheduler import Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(cfg, KEY)
+
+
+def _req(cfg, i, plen=8, max_new=6, seed=0, **kw):
+    rng = np.random.RandomState(seed + i)
+    return Request(i, rng.randint(0, cfg.vocab_size, plen).astype(np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_slots", 1)
+    kw.setdefault("admission", "edf")
+    kw.setdefault("enforce_deadlines", True)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+def test_already_expired_at_submit(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    h = eng.submit(_req(cfg, 0, deadline_s=0.0))
+    (c,) = eng.run()
+    assert c.finish_reason == "timeout"
+    assert c.tokens == [] and h.tokens == []
+    assert eng.stats()["sheds"] == 1
+    assert eng.stats()["admissions"] == 0, "shed before prefill"
+
+
+def test_expired_while_queued(setup):
+    """One slot, a long request admitted first, a tight-deadline request
+    queued behind it: the queued request expires waiting and sheds
+    without ever touching a slot."""
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    long = eng.submit(_req(cfg, 0, max_new=24))
+    # step until the long request occupies the only slot, then queue the
+    # tight-deadline request behind it (EDF would otherwise admit the
+    # earlier-due request first)
+    while not eng.scheduler.active:
+        eng.step()
+    tight = eng.submit(_req(cfg, 1, deadline_s=1e-4))
+    time.sleep(2e-3)                    # let the queued deadline lapse
+    outs = {c.id: c for c in eng.run()}
+    assert outs[0].finish_reason == "length"
+    assert len(outs[0].tokens) == 24
+    assert outs[1].finish_reason == "timeout" and outs[1].tokens == []
+    assert tight.tokens == []
+    admitted = [e.request_id for e in eng.scheduler.events
+                if e.kind == "admit"]
+    assert 1 not in admitted, "expired request must shed before prefill"
+    assert long.finish_reason == "length"
+
+
+def test_expired_mid_decode(setup):
+    """A generous decode budget with a deadline shorter than the decode
+    wall time: the request starts, emits some tokens, then sheds
+    mid-decode with the stream frozen and its slot released."""
+    cfg, params = setup
+    eng = _engine(cfg, params, max_len=512)
+    eng.generate([_req(cfg, 99)])       # warmup: compiles prefill/decode
+    h = eng.submit(_req(cfg, 0, max_new=400, deadline_s=0.05))
+    (c,) = eng.run()
+    assert c.finish_reason == "timeout"
+    assert 0 < len(c.tokens) < 400, \
+        f"expected a mid-decode shed, got {len(c.tokens)} tokens"
+    assert h.tokens == c.tokens, "token emitted after the shed"
+    sched = eng.scheduler
+    assert sched.done and sorted(sched.free) == [0], "slot leak"
+    evict = [e for e in sched.events if e.kind == "shed" and e.request_id == 0]
+    assert len(evict) == 1 and evict[0].slot == 0
+
+
+@pytest.mark.parametrize("prefill_chunk", [0, 4])
+def test_paged_shed_releases_blocks(setup, prefill_chunk):
+    cfg, params = setup
+    eng = _engine(cfg, params, max_len=512, max_slots=2, kv_layout="paged",
+                  block_size=8, num_blocks=70, prefill_chunk=prefill_chunk,
+                  debug=True)
+    eng.generate([_req(cfg, 99)])       # warmup
+    hs = [eng.submit(_req(cfg, 0, max_new=400, deadline_s=0.04)),
+          eng.submit(_req(cfg, 1, deadline_s=0.0)),
+          eng.submit(_req(cfg, 2, max_new=4))]
+    outs = {c.id: c for c in eng.run()}
+    assert outs[0].finish_reason == "timeout"       # mid-decode
+    assert outs[1].finish_reason == "timeout"       # at submit
+    assert outs[1].tokens == []
+    assert outs[2].finish_reason == "length"        # survivor
+    assert eng.scheduler.alloc.in_use == 0, "shed leaked blocks"
+    assert not eng.scheduler.block_tables.any()
+    assert hs[0].tokens == outs[0].tokens
+
+
+def test_survivors_match_static_oracle(setup):
+    """The acceptance-criteria trace: a contended EDF run sheds its
+    expired requests as "timeout" while every survivor's greedy tokens
+    are bit-identical to the static-bucket oracle decoding the same
+    surviving set."""
+    cfg, params = setup
+    eng = _engine(cfg, params, max_slots=2)
+    eng.generate([_req(cfg, 99)])       # warmup so decode wall time is sane
+    reqs = []
+    for i in range(8):
+        # every third request carries an unmeetable deadline on this
+        # contended 2-slot budget; the rest are deadline-free survivors
+        reqs.append(_req(cfg, i, plen=8 + 2 * (i % 3), max_new=6,
+                         deadline_s=1e-4 if i % 3 == 2 else None))
+    outs = {c.id: c for c in eng.generate(reqs)}
+    shed = {i for i, c in outs.items() if c.finish_reason == "timeout"}
+    assert shed == {2, 5}, f"expected the tight-deadline cohort, got {shed}"
+    for i in shed:
+        # EDF serves the earliest-due first, so the tight requests may
+        # start decoding before the shed fires — frozen prefix, never
+        # the full budget
+        assert len(outs[i].tokens) < reqs[i].max_new_tokens
+    survivors = [r for r in reqs if r.id not in shed]
+    oracle = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
+    expect = {c.id: c for c in oracle.generate(survivors)}
+    for i, c in expect.items():
+        assert outs[i].tokens == c.tokens, \
+            f"survivor {i} diverged from the static oracle"
+        assert outs[i].finish_reason == c.finish_reason
+
+
+def test_enforcement_off_never_sheds(setup):
+    """The default keeps deadlines order-only (pure EDF): an expired
+    deadline is still served — exactly the pre-enforcement behavior the
+    conformance matrix and the EDF policy tests rely on."""
+    cfg, params = setup
+    eng = _engine(cfg, params, enforce_deadlines=False)
+    outs = eng.generate([_req(cfg, 0, deadline_s=0.0),
+                         _req(cfg, 1, deadline_s=1e-5, max_new=4)])
+    assert [c.finish_reason for c in outs] == ["length", "length"]
+    assert eng.stats()["sheds"] == 0
+
+
+def test_batch_mode_rejects_enforcement(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="enforce_deadlines"):
+        Engine(cfg, params, EngineConfig(admission="batch",
+                                         enforce_deadlines=True))

@@ -16,8 +16,14 @@
 * (the legacy ``ServeEngine`` shim has a dedicated regression suite in
   tests/test_serving_shim.py);
 * a hypothesis property: ANY interleaving of submit / cancel / priority
-  / deadline / failure events leaks no slots or blocks, and a cancelled
-  request never emits a token after ``cancel()`` returns.
+  / deadline / failure events — with wall-clock deadline enforcement on
+  or off — leaks no slots or blocks, a cancelled request never emits a
+  token after ``cancel()`` returns, and a shed request finishes
+  ``"timeout"`` with its stream frozen;
+* (deadline-shed unit coverage — expired before prefill, mid-decode,
+  at submit — lives in tests/test_deadline_shedding.py; the threaded /
+  asyncio surface in tests/test_async_engine.py; the HTTP layer in
+  tests/test_server.py).
 """
 from __future__ import annotations
 
@@ -472,6 +478,7 @@ def test_property_lifecycle_interleavings():
                           label="preemption"),
                       prefill_chunk=data.draw(st.sampled_from([0, 4]),
                                               label="chunk"))
+        enforce = data.draw(st.booleans(), label="enforce_deadlines")
         n_fail = data.draw(st.integers(0, 2), label="n_fail")
         failures = [SlotFailure(step=data.draw(st.integers(0, 20),
                                                label=f"fail_step{i}"),
@@ -481,7 +488,8 @@ def test_property_lifecycle_interleavings():
                     for i in range(n_fail)]
         eng = Engine(CFG, PARAMS, EngineConfig(
             max_len=16, max_slots=max_slots, admission=admission,
-            debug=True, **kw), failures=failures)
+            enforce_deadlines=enforce, debug=True, **kw),
+            failures=failures)
         handles = []
         frozen = {}                      # id -> tokens at cancel() return
         for i in range(n_req):
@@ -515,7 +523,7 @@ def test_property_lifecycle_interleavings():
             "request lost or duplicated"
         for h, c in zip(handles, sorted(outs, key=lambda c: c.id)):
             assert c.finish_reason in ("eos", "length", "cancelled",
-                                       "failed")
+                                       "failed", "timeout")
             assert h.completion is c
             if c.finish_reason == "cancelled":
                 assert h.tokens == frozen[c.id], \
@@ -525,6 +533,12 @@ def test_property_lifecycle_interleavings():
             elif c.finish_reason == "failed":
                 assert h.request.max_restarts is not None
                 assert c.restarts <= h.request.max_restarts
+            elif c.finish_reason == "timeout":
+                # shedding only ever fires on a deadline-carrying
+                # request under enforcement, and freezes the stream
+                assert enforce and h.request.deadline_s is not None
+                assert h.tokens == c.tokens, \
+                    "token emitted after the shed"
         sched = eng.scheduler
         assert sched.done
         assert sorted(sched.free) == list(range(max_slots)), "slot leak"
