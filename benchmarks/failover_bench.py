@@ -36,6 +36,7 @@ from repro.core import Explorer, Mapping, PlatformModel, Simulator, \
     paper_platform
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.observability import Observability, simulator_trace
 from repro.runtime.resilience import (FailoverController, FailureTrace,
                                       HeartbeatConfig)
 from repro.runtime.scheduler import (ContinuousScheduler, SchedulerConfig,
@@ -59,7 +60,8 @@ def _cfg(tiny: bool = False) -> ModelConfig:
 
 
 def _controller_rows(cfg, params, *, n_frames: int, fail_frac: float,
-                     seed: int) -> List[Row]:
+                     seed: int,
+                     obs: Optional[Observability] = None) -> List[Row]:
     # The companion paper's scenario needs collaboration to *win*
     # nominally so that losing the server genuinely degrades service:
     # the N270 endpoint is far too weak for full on-device inference
@@ -80,10 +82,11 @@ def _controller_rows(cfg, params, *, n_frames: int, fail_frac: float,
         rng.randint(0, cfg.vocab_size, (1, SEQ_LEN)).astype(np.int32))}
         for _ in range(n_frames)]
 
-    def controller(hb=None):
+    def controller(hb=None, obs_=None):
         return FailoverController(g, primary, fallbacks, platform=pm,
                                   heartbeat=hb,
-                                  checkpoint_frames=max(2, n_frames // 3))
+                                  checkpoint_frames=max(2, n_frames // 3),
+                                  obs=obs_)
 
     nominal, nom_rep = controller().serve(frames)
     assert nom_rep.num_failovers == 0
@@ -92,7 +95,7 @@ def _controller_rows(cfg, params, *, n_frames: int, fail_frac: float,
 
     t_fail = fail_frac * nom_rep.makespan_s
     trace = FailureTrace().kill_unit("server", at=t_fail)
-    ctl = controller(hb)
+    ctl = controller(hb, obs)
     outs, rep = ctl.serve(frames, failures=trace)
 
     assert rep.num_failovers >= 1 and not rep.exhausted, \
@@ -162,7 +165,8 @@ def _scheduler_rows(cfg, params, *, n_requests: int, seed: int) -> List[Row]:
     ]
 
 
-def _simulator_rows(cfg, params, *, n_frames: int, seed: int) -> List[Row]:
+def _simulator_rows(cfg, params, *, n_frames: int, seed: int,
+                    obs: Optional[Observability] = None) -> List[Row]:
     g = T.to_actor_graph(cfg, params, batch=1, seq=SEQ_LEN, group_size=2)
     pg = paper_platform("N270", "ethernet")
     pm = PlatformModel(pg)
@@ -185,6 +189,11 @@ def _simulator_rows(cfg, params, *, n_frames: int, seed: int) -> List[Row]:
         .revive_unit("server", at=sv[-1].finish_s)
     res = Simulator(g, mapping=mapping, platform=pm).run(
         n_frames, source_inputs={"Input": feed}, failures=trace)
+    if obs is not None and obs.enabled:
+        # modeled-clock unit tracks: every firing of the failure run as
+        # a complete slice, so the kill/replay gap is visible next to
+        # the controller's detection/resynthesis spans
+        simulator_trace(obs.tracer, res)
     assert res.frames_replayed, \
         "a mid-activity server kill must lose (and replay) frames"
     assert not res.frames_lost, "revived server must allow full replay"
@@ -201,16 +210,35 @@ def _simulator_rows(cfg, params, *, n_frames: int, seed: int) -> List[Row]:
 
 
 def run(*, tiny: bool = False, n_frames: Optional[int] = None,
-        fail_frac: float = 0.4, seed: int = 0) -> List[Row]:
+        fail_frac: float = 0.4, seed: int = 0,
+        trace_out: Optional[str] = None) -> List[Row]:
     if not 0.0 < fail_frac < 1.0:
         raise ValueError(f"--fail-frac must be in (0, 1), got {fail_frac}")
     cfg = _cfg(tiny)
     n = n_frames or (6 if tiny else 16)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    obs = Observability(enabled=True)
     rows = _controller_rows(cfg, params, n_frames=n, fail_frac=fail_frac,
-                            seed=seed)
+                            seed=seed, obs=obs)
     rows += _scheduler_rows(cfg, params, n_requests=min(n, 8), seed=seed)
-    rows += _simulator_rows(cfg, params, n_frames=min(n, 6), seed=seed)
+    rows += _simulator_rows(cfg, params, n_frames=min(n, 6), seed=seed,
+                            obs=obs)
+    # the controller's observability view of the same run: detection /
+    # recovery latency histogram summaries as rows (modeled seconds)
+    snap = obs.registry.snapshot()
+    det = snap["histograms"].get("repro_failover_detection_seconds", {})
+    rec = snap["histograms"].get("repro_failover_recovery_seconds", {})
+    rows += [
+        Row("failover", "obs_failovers_total",
+            float(snap["counters"].get("repro_failovers_total", 0)), ""),
+        Row("failover", "obs_detection_p50_ms",
+            det.get("p50", 0.0) * 1e3, "ms"),
+        Row("failover", "obs_recovery_p50_ms",
+            rec.get("p50", 0.0) * 1e3, "ms"),
+    ]
+    if trace_out:
+        n_ev = obs.write_trace(trace_out)
+        print(f"wrote {trace_out} ({n_ev} trace events, modeled clocks)")
     return rows
 
 
@@ -225,9 +253,14 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a modeled-clock Chrome trace (simulator "
+                         "unit tracks + failover detection/resynthesis "
+                         "spans) here")
     args = ap.parse_args()
     rows = run(tiny=args.tiny, n_frames=args.frames,
-               fail_frac=args.fail_frac, seed=args.seed)
+               fail_frac=args.fail_frac, seed=args.seed,
+               trace_out=args.trace_out)
     print(HEADER)
     emit(rows, out_path=args.out)
 

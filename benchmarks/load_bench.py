@@ -8,7 +8,13 @@ the numbers that matter to a serving operator:
 
 * **TTFT p50/p99** — wall-clock time from sending the request to the
   first streamed token line arriving on the socket;
-* **inter-token p50/p99** — gaps between successive token lines;
+* **inter-token p50/p99** — steady-state gaps between successive token
+  lines. The token1->token2 gap is reported separately (``first_gap_s``)
+  because it absorbs stream-setup stalls that say nothing about decode
+  cadence. The remaining tail is *real*: under continuous batching a
+  mid-stream admission's prefill chunks stall decode for everyone in
+  the batch — load the ``--trace-out`` file into Perfetto and the p99
+  gaps line up with ``prefill chunk`` slices on the neighbouring slot;
 * **throughput** — generated tokens per wall-clock second across the
   whole run;
 * **shed rate** — the fraction of requests the server refused (429
@@ -52,13 +58,14 @@ def _percentiles(xs: List[float]) -> Dict[str, float]:
 
 
 class _Result:
-    __slots__ = ("id", "status", "ttft_s", "gaps_s", "n_tokens",
-                 "finish_reason", "error")
+    __slots__ = ("id", "status", "ttft_s", "first_gap_s", "gaps_s",
+                 "n_tokens", "finish_reason", "error")
 
     def __init__(self, id):
         self.id = id
         self.status = 0
         self.ttft_s = None
+        self.first_gap_s = None
         self.gaps_s: List[float] = []
         self.n_tokens = 0
         self.finish_reason = None
@@ -94,7 +101,12 @@ def _run_one(host: str, port: int, body: Dict[str, Any],
             if "token" in obj:
                 if res.ttft_s is None:
                     res.ttft_s = now - t_send
-                elif prev is not None:
+                elif res.first_gap_s is None:
+                    # token1->token2 absorbs stream-setup / chunked-
+                    # prefill stalls; keep it out of the steady-state
+                    # inter-token series
+                    res.first_gap_s = now - prev
+                else:
                     res.gaps_s.append(now - prev)
                 prev = now
                 res.n_tokens += 1
@@ -119,6 +131,16 @@ def _worker(host: str, port: int, jobs: List[tuple], t0: float,
         res = _Result(rid)
         _run_one(host, port, body, res)
         results.append(res)
+
+
+def _http_get(host: str, port: int, path: str) -> tuple:
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    try:
+        conn.request("GET", path)
+        r = conn.getresponse()
+        return r.status, r.read()
+    finally:
+        conn.close()
 
 
 def _poisson_schedule(n: int, rate_per_s: float, seed: int) -> List[float]:
@@ -175,6 +197,7 @@ def run_load(host: str, port: int, *, n: int, rate: float, max_new: int,
     failed = [r for r in results
               if r not in ok and r not in timeouts and r not in rejected]
     ttfts = [r.ttft_s for r in ok if r.ttft_s is not None]
+    first_gaps = [r.first_gap_s for r in ok if r.first_gap_s is not None]
     gaps = [g for r in ok for g in r.gaps_s]
     toks = sum(r.n_tokens for r in results)
     return {
@@ -193,6 +216,7 @@ def run_load(host: str, port: int, *, n: int, rate: float, max_new: int,
         "shed_rate": (len(timeouts) + len(rejected)) / max(n, 1),
         "throughput_tok_per_s": toks / wall,
         "ttft_s": _percentiles(ttfts),
+        "first_gap_s": _percentiles(first_gaps),
         "inter_token_s": _percentiles(gaps),
     }
 
@@ -205,7 +229,9 @@ def run_load(host: str, port: int, *, n: int, rate: float, max_new: int,
 def _self_hosted(args):
     """Build the tiny EngineServer this bench drives when no --url is
     given. Deadline enforcement is always on here — the recorded
-    trajectory is supposed to show the shed path working."""
+    trajectory is supposed to show the shed path working — and so is
+    observability, so the recorded run carries server-side histogram
+    summaries next to the client-side percentiles."""
     import jax
 
     from repro.models import transformer as T
@@ -221,7 +247,8 @@ def _self_hosted(args):
     ec = EngineConfig.from_args(
         args, max_len=args.max_len,
         admission=args.policy or "edf", enforce_deadlines=True,
-        max_slots=args.slots if args.slots != 8 else 2)
+        max_slots=args.slots if args.slots != 8 else 2,
+        observability=True)
     engine = Engine(cfg, params, ec)
     return EngineServer(engine, ServerConfig(
         port=0, max_inflight=args.max_inflight, max_new_cap=args.max_new))
@@ -257,6 +284,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="write the result JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="fetch the server's Chrome trace (GET /trace) "
+                         "after the run, validate it, and write it here "
+                         "(load into Perfetto / chrome://tracing)")
     ap.add_argument("--baseline", default=None,
                     help="committed BENCH_serving.json to regression-gate "
                          "TTFT p99 against")
@@ -291,6 +322,42 @@ def main(argv=None) -> int:
                        vocab=256, seed=args.seed)
         if srv is not None:
             out["server_status"] = srv.status()
+        # server-side view of the same run: scrape /metrics while the
+        # server is still up and keep the histogram summaries next to
+        # the client-side percentiles (TTFT should agree to within the
+        # HTTP/streaming overhead)
+        from repro.serving import parse_prometheus, validate_chrome_trace
+        m_status, m_body = _http_get(host, port, "/metrics")
+        if m_status == 200:
+            parsed = parse_prometheus(m_body.decode())
+            out["server_metrics"] = {
+                "counters": parsed["counters"],
+                "histograms": {
+                    name: {"count": h["count"], "sum": h["sum"]}
+                    for name, h in parsed["histograms"].items()},
+            }
+            hists = out.get("server_status", {}).get(
+                "metrics", {}).get("histograms", {})
+            ttft = hists.get("repro_ttft_seconds")
+            if ttft and ttft.get("count"):
+                out["server_metrics"]["ttft_s"] = {
+                    "p50": ttft["p50"], "p99": ttft["p99"]}
+                print(f"server-side TTFT p50={ttft['p50'] * 1e3:.1f} ms "
+                      f"p99={ttft['p99'] * 1e3:.1f} ms "
+                      f"(client-side p50="
+                      f"{out['ttft_s']['p50'] * 1e3:.1f} ms "
+                      f"p99={out['ttft_s']['p99'] * 1e3:.1f} ms)")
+        if args.trace_out:
+            t_status, t_body = _http_get(host, port, "/trace")
+            if t_status != 200:
+                print(f"FAIL: GET /trace -> {t_status}", file=sys.stderr)
+                return 1
+            trace = json.loads(t_body)
+            n_ev = validate_chrome_trace(trace)
+            with open(args.trace_out, "w") as f:
+                json.dump(trace, f)
+                f.write("\n")
+            print(f"wrote {args.trace_out} ({n_ev} trace events)")
     finally:
         if srv is not None:
             srv.close()

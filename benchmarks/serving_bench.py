@@ -52,6 +52,7 @@ from repro.core import Explorer, Mapping, PlatformModel, paper_platform, \
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.observability import pipeline_trace
 from repro.runtime.serving import PartitionedServeEngine, Request
 
 PROMPT_LENS = (32, 48, 64, 96)
@@ -253,10 +254,45 @@ def _prefix_rows(cfg, params, *, max_len: int, slots: int, n: int,
     ]
 
 
+def _observability_rows(cfg, params, reqs, arrivals, *, max_len: int,
+                        slots: int):
+    """The same open-loop Poisson trace through an observability-enabled
+    continuous engine: the engine's own histogram summaries (TTFT, queue
+    wait, step duration) become bench rows; the engine's
+    ``Observability`` rides back so ``run`` can append the pipelined
+    section's modeled timeline before writing ``--trace-out``."""
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=max_len, max_slots=slots, observability=True))
+    eng.generate(reqs)                  # warmup (compiles), closed loop
+    # scope the summaries to the measured window: the warmup's
+    # compile-inflated TTFTs would otherwise dominate every percentile
+    eng.obs.registry.reset_histograms()
+    _measure(eng, reqs, arrivals)
+    h = eng.snapshot()["metrics"]["histograms"]
+
+    def p(name: str, q: str) -> float:
+        return float(h.get(name, {}).get(q, 0.0)) * 1e3
+
+    rows = [
+        Row("serving", "obs_ttft_p50_ms", p("repro_ttft_seconds", "p50"),
+            "ms"),
+        Row("serving", "obs_ttft_p99_ms", p("repro_ttft_seconds", "p99"),
+            "ms"),
+        Row("serving", "obs_queue_wait_p50_ms",
+            p("repro_queue_wait_seconds", "p50"), "ms"),
+        Row("serving", "obs_step_duration_p50_ms",
+            p("repro_step_duration_seconds", "p50"), "ms"),
+        Row("serving", "obs_inter_token_p50_ms",
+            p("repro_inter_token_seconds", "p50"), "ms"),
+    ]
+    return rows, eng.obs
+
+
 def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         max_new: Optional[int] = None, rate: float = 200.0,
         seed: int = 1, paged: bool = False, watermark: int = 0,
-        prefix_cache: bool = False) -> List[Row]:
+        prefix_cache: bool = False,
+        trace_out: Optional[str] = None) -> List[Row]:
     cfg = _cfg(tiny)
     n = n_requests or (8 if tiny else 16)
     new = max_new or (8 if tiny else 32)
@@ -297,6 +333,9 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
             float(np.mean([x.ttft_s for x in o["outs"]])) * 1e3, "ms"),
     ]
     rows += _priority_rows(cfg, params, reqs, arrivals, max_len=max_len)
+    obs_rows, obs = _observability_rows(cfg, params, reqs, arrivals,
+                                        max_len=max_len, slots=slots)
+    rows += obs_rows
     if paged:
         rows += _paged_rows(cfg, params, reqs, arrivals, max_len=max_len,
                             slots=slots, watermark=watermark,
@@ -329,6 +368,12 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
     ]
     assert sched.makespan_s < sched.sequential_s, \
         "pipelined execution must beat sequential stage execution"
+    if trace_out:
+        # wall-clock engine tracks + the pipelined section's modeled
+        # unit tracks in one file (separate processes, separate clocks)
+        pipeline_trace(obs.tracer, sched)
+        n_ev = obs.write_trace(trace_out)
+        print(f"wrote {trace_out} ({n_ev} trace events)")
 
     if not tiny:
         # explorer over the LLM actor graph on the TPU pod platform model:
@@ -358,11 +403,14 @@ def main() -> None:
                     help="arrival-process RNG seed (reproducible sweeps)")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the observability run's Chrome trace "
+                         "here (load into Perfetto / chrome://tracing)")
     args = ap.parse_args()
     rows = run(tiny=args.tiny, n_requests=args.requests,
                max_new=args.max_new, rate=args.rate, seed=args.seed,
                paged=args.paged, watermark=args.watermark,
-               prefix_cache=args.prefix_cache)
+               prefix_cache=args.prefix_cache, trace_out=args.trace_out)
     print(HEADER)
     emit(rows, out_path=args.out)
 

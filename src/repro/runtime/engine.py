@@ -63,9 +63,11 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.observability import Observability
 from repro.runtime.policies import (BatchAdmission, Sampler, make_admission,
                                     make_preemption)
-from repro.runtime.scheduler import (Completion, ContinuousScheduler, Request,
+from repro.runtime.scheduler import (COUNTER_KEYS, Completion,
+                                     ContinuousScheduler, Request,
                                      SchedulerConfig, SlotFailure,
                                      validate_request_fits)
 
@@ -107,6 +109,10 @@ class EngineConfig:
     temperature: float = 1.0
     seed: int = 0
     debug: bool = False         # step-boundary invariant asserts
+    # metrics + lifecycle tracing (runtime.observability): histograms,
+    # per-request spans, per-step phase breakdown, /trace export. Off by
+    # default — the disabled hot path pays one `is None` test per hook.
+    observability: bool = False
 
     # -- shared CLI construction (launch/serve.py, serving_bench.py,
     #    load_bench.py, runtime/server.py all register the same flags,
@@ -151,6 +157,10 @@ class EngineConfig:
                         help="shed requests whose wall-clock deadline_s "
                              "passes (finish_reason='timeout') instead of "
                              "only ordering by deadline")
+        ap.add_argument("--observability", action="store_true",
+                        help="record lifecycle spans + latency histograms "
+                             "(served at /metrics and /trace; exported by "
+                             "the benches via --trace-out)")
 
     @classmethod
     def from_args(cls, args, **overrides) -> "EngineConfig":
@@ -165,7 +175,8 @@ class EngineConfig:
             watermark=args.watermark, prefill_chunk=args.prefill_chunk,
             prefix_cache=args.prefix_cache,
             admission=args.policy or "fifo", preemption=args.preemption,
-            enforce_deadlines=args.enforce_deadlines)
+            enforce_deadlines=args.enforce_deadlines,
+            observability=getattr(args, "observability", False))
         kw.update(overrides)
         return cls(**kw)
 
@@ -380,6 +391,11 @@ class Engine:
         self._drain_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._work = threading.Event()      # set on submit, wakes the drain
+        # the registry/tracer pair always exists (so /metrics renders for
+        # every policy); the scheduler only *records* into it when the
+        # knob is on — counters are mirrored from stats() at snapshot
+        # time either way, histograms/spans need enabled=True
+        self.obs = Observability(enabled=c.observability)
         if self.batch_mode:
             if c.kv_layout != "slotted" or c.prefill_chunk:
                 raise ValueError(
@@ -416,7 +432,8 @@ class Engine:
                     prefix_cache=c.prefix_cache,
                     enforce_deadlines=c.enforce_deadlines, debug=c.debug),
                 failures=failures, admission=self.admission,
-                preemption=self.preemption)
+                preemption=self.preemption,
+                obs=self.obs if c.observability else None)
             self.sampler = self.scheduler.sampler
 
     # -- background drain ---------------------------------------------------
@@ -576,15 +593,72 @@ class Engine:
     # -- introspection ------------------------------------------------------
 
     def kv_stats(self) -> Dict[str, float]:
+        """Layout KV occupancy. Batch admission has no persistent cache,
+        so it reports an empty (but typed) dict rather than raising —
+        /status and /metrics must work for every policy."""
         if self.scheduler is None:
-            raise ValueError("kv_stats needs a continuous admission policy "
-                             "(batch admission has no persistent KV cache)")
+            return {}
         return self.scheduler.kv_stats()
 
     def stats(self) -> Dict[str, int]:
+        """Lifecycle event counters. Batch admission reports all-zero
+        counters (no continuous scheduler events) rather than raising."""
         if self.scheduler is None:
-            raise ValueError("stats needs a continuous admission policy")
+            return dict.fromkeys(COUNTER_KEYS, 0)
         return self.scheduler.stats()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One consistent view of the engine under its own lock: queue
+        depth, active slots, KV occupancy, lifecycle counters, and (when
+        observability is on) histogram summaries. The only sanctioned
+        way for other threads — the HTTP server above all — to read
+        engine state."""
+        with self._lock:
+            if self.scheduler is None:
+                snap: Dict[str, Any] = {
+                    "queue_depth": len(self._pending),
+                    "active_slots": 0,
+                    "kv": {},
+                    "counters": dict.fromkeys(COUNTER_KEYS, 0),
+                }
+            else:
+                s = self.scheduler
+                snap = {
+                    "queue_depth": s._waiting(),
+                    "active_slots": len(s.active),
+                    "kv": s.kv_stats(),
+                    "counters": s.stats(),
+                }
+        snap["observability"] = self.config.observability
+        snap["metrics"] = self.obs.snapshot()
+        return snap
+
+    def metrics_text(self,
+                     extra_gauges: Optional[Dict[str, float]] = None) -> str:
+        """Prometheus text exposition. Counters are mirrored from the
+        scheduler's event log into the registry here (monotone ``sync``,
+        so it composes with live increments), gauges are stamped with
+        the snapshot values, and whatever histograms the scheduler
+        recorded ride along."""
+        snap = self.snapshot()
+        reg = self.obs.registry
+        for k, v in snap["counters"].items():
+            name = f"repro_{k}" if k.endswith("_total") else f"repro_{k}_total"
+            reg.counter(name, help=f"engine lifecycle counter: {k}").sync(v)
+        reg.gauge("repro_queue_depth",
+                  help="requests waiting for a slot").set(snap["queue_depth"])
+        reg.gauge("repro_active_slots",
+                  help="slots decoding right now").set(snap["active_slots"])
+        for k, v in snap["kv"].items():
+            reg.gauge(f"repro_{k}", help="KV layout stat").set(v)
+        for k, v in (extra_gauges or {}).items():
+            reg.gauge(k).set(v)
+        return reg.render()
+
+    def trace_json(self) -> Dict[str, Any]:
+        """Chrome trace-event snapshot (empty but valid when
+        observability is off)."""
+        return self.obs.tracer.chrome_trace()
 
     # -- static-bucket executor (BatchAdmission) ----------------------------
 

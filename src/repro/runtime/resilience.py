@@ -45,6 +45,8 @@ from typing import (Any, Dict, FrozenSet, Iterable, List, Optional, Sequence,
 from repro.core.graph import Graph
 from repro.core.mapping import Mapping, PlatformModel
 from repro.core.synthesis import StagedProgram, synthesize
+from repro.runtime.observability import (TIME_BUCKETS_S, Observability,
+                                         failover_trace)
 
 __all__ = [
     "FailureEvent", "FailureTrace", "FailureInjector", "HeartbeatConfig",
@@ -381,7 +383,8 @@ class FailoverController:
                  fallbacks: Sequence[Mapping] = (), *,
                  platform: Optional[PlatformModel] = None,
                  heartbeat: Optional[HeartbeatConfig] = None,
-                 checkpoint_frames: int = 8):
+                 checkpoint_frames: int = 8,
+                 obs: Optional[Observability] = None):
         self.g = g
         self.platform = platform
         self.monitor = HeartbeatMonitor(heartbeat)
@@ -389,6 +392,20 @@ class FailoverController:
         self.candidates: List[Mapping] = [primary, *fallbacks]
         self.mapping = primary
         self.program: StagedProgram = synthesize(g, primary)
+        # observability: each failover lands as modeled-clock detection /
+        # resynthesis spans plus latency histograms
+        self.obs = obs if (obs is not None and obs.enabled) else None
+        if self.obs is not None:
+            r = self.obs.registry
+            self._h_detect = r.histogram(
+                "repro_failover_detection_seconds", TIME_BUCKETS_S,
+                help="modeled failure instant to heartbeat detection")
+            self._h_recover = r.histogram(
+                "repro_failover_recovery_seconds", TIME_BUCKETS_S,
+                help="modeled failure instant to replacement program ready"
+                     " (detection + re-synthesis)")
+            self._c_failovers = r.counter(
+                "repro_failovers_total", help="mapping switches performed")
 
     # -- mapping viability --------------------------------------------------
 
@@ -518,6 +535,12 @@ class FailoverController:
             dead_units=dead_u, dead_links=dead_l,
             replayed_frames=list(replay))
         report.events.append(ev)
+        if self.obs is not None:
+            failover_trace(self.obs.tracer, [ev])
+            self._h_detect.observe(ev.t_detect_s - ev.t_fail_s)
+            self._h_recover.observe(ev.recovery_latency_s)
+            if nxt is not None:
+                self._c_failovers.inc()
         if nxt is None:
             report.exhausted = True
             report.makespan_s = max(report.makespan_s, t_detect)

@@ -86,6 +86,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime.observability import (SIZE_BUCKETS, TIME_BUCKETS_S,
+                                         Observability)
 from repro.runtime.policies import (BatchAdmission, EvictLatest,
                                     FifoAdmission, Sampler, make_admission,
                                     make_preemption, request_due_s,
@@ -95,9 +97,17 @@ __all__ = [
     "Request", "Completion", "SchedulerConfig", "SchedEvent", "SlotFailure",
     "BlockAllocator", "SlottedLayout", "PagedLayout", "ContinuousScheduler",
     "sample_tokens", "validate_request_fits", "FINISH_REASONS",
+    "COUNTER_KEYS",
 ]
 
 FINISH_REASONS = ("eos", "length", "cancelled", "failed", "timeout")
+
+# stats() key schema — the typed-empty snapshot for policies with no
+# continuous scheduler (Engine.stats on batch admission) must agree
+COUNTER_KEYS = (
+    "requests_submitted", "admissions", "evictions", "preemptions",
+    "slot_failures", "cancellations", "sheds", "steps", "tokens_generated",
+    "prefix_hits", "prefill_tokens_total", "prefill_tokens_saved")
 
 
 @dataclass
@@ -794,6 +804,9 @@ class _Ticket:                          # removal must never compare prompts
     retired: bool = False       # completed while a stale heap entry remains
     where: str = "backlog"      # backlog | queued | active | chunking | done
     handle: Any = None          # RequestHandle, when served via Engine
+    # observability bookkeeping (scheduler-clock seconds)
+    queued_at_s: float = 0.0    # last _enqueue instant (queue-wait metric)
+    last_emit_s: float = 0.0    # last token instant (inter-token metric)
 
 
 @dataclass
@@ -819,7 +832,8 @@ class ContinuousScheduler:
                  sched: Optional[SchedulerConfig] = None, *,
                  failures: Optional[List[SlotFailure]] = None,
                  admission: Any = None, preemption: Any = None,
-                 sampler: Optional[Sampler] = None):
+                 sampler: Optional[Sampler] = None,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.params = params
         self.sched = s = sched or SchedulerConfig()
@@ -894,6 +908,43 @@ class ContinuousScheduler:
         # check is O(expired log n), not a scan of the waiting set.
         # Entries for finished tickets are skipped lazily at the top.
         self._deadline_heap: List[tuple] = []
+        self.tokens_generated = 0
+        # Observability (None = disabled; the hot path pays one `is None`
+        # test per hook). Trace timestamps run on a *construction-epoch*
+        # clock (`_obs_now`) rather than the scheduler's per-drain `_t0`:
+        # `_t0` resets between drains, and a trace track's timestamps
+        # must never go backwards. Metric *durations* are differences of
+        # scheduler-clock stamps, so they are epoch-independent.
+        self.obs = obs if (obs is not None and obs.enabled) else None
+        if self.obs is not None:
+            self._obs_epoch = time.perf_counter()
+            self._phase: Dict[str, float] = {}
+            r = self.obs.registry
+            self._m = {
+                "ttft": r.histogram(
+                    "repro_ttft_seconds", TIME_BUCKETS_S,
+                    help="arrival to first token (admission wait + prefill)"),
+                "inter_token": r.histogram(
+                    "repro_inter_token_seconds", TIME_BUCKETS_S,
+                    help="steady-state gap between consecutive tokens "
+                         "of one request"),
+                "step": r.histogram(
+                    "repro_step_duration_seconds", TIME_BUCKETS_S,
+                    help="one scheduler iteration, boundary to boundary"),
+                "queue_wait": r.histogram(
+                    "repro_queue_wait_seconds", TIME_BUCKETS_S,
+                    help="enqueue to admission pop"),
+                "chunk": r.histogram(
+                    "repro_prefill_chunk_tokens", SIZE_BUCKETS,
+                    help="prompt tokens prefilled per admission/chunk step"),
+                "blocks": r.histogram(
+                    "repro_blocks_in_use", SIZE_BUCKETS,
+                    help="paged KV blocks held, sampled each step"),
+            }
+            for ph in ("admission", "prefill", "decode", "sampling", "kv"):
+                self._m["step_" + ph] = r.histogram(
+                    f"repro_step_{ph}_seconds", TIME_BUCKETS_S,
+                    help=f"per-step time inside the {ph} phase")
 
     # -- legacy attribute surface (tests/benches reach for these) -----------
 
@@ -970,6 +1021,13 @@ class ContinuousScheduler:
         ticket.where = "queued"
         heapq.heappush(self.queue, (self.admission.key(ticket),
                                     ticket.submit_seq, ticket))
+        if self.obs is not None:
+            # only ever called while stepping, so _t0 is set
+            ticket.queued_at_s = time.perf_counter() - self._t0
+            self.obs.tracer.async_begin(
+                "engine", "queue", f"req {ticket.req.id} queued",
+                ticket.req.id, self._obs_now(),
+                args={"restarts": ticket.restarts})
 
     def _queue_head(self) -> Optional[_Ticket]:
         """The policy's next pick, skipping entries retired by
@@ -1005,11 +1063,22 @@ class ContinuousScheduler:
         and (if anything is active) run one decode step. Returns the
         completions this iteration produced. Drives the step-wise Engine
         API (``RequestHandle.stream()`` pulls this between tokens)."""
+        if self.obs is None:
+            return self._step_impl(on_completion)
+        self._phase = {}
+        w0 = time.perf_counter()
+        out = self._step_impl(on_completion)
+        self._obs_step_done(w0, time.perf_counter())
+        return out
+
+    def _step_impl(self, on_completion: Optional[
+            Callable[[Completion], None]] = None) -> List[Completion]:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         if self._backlog_dirty:
             self._sort_pending()
         t0 = self._t0
+        obs = self.obs
         done: List[Completion] = []
         now = time.perf_counter() - t0
         while (self._backlog_pos < len(self.backlog)
@@ -1020,6 +1089,10 @@ class ContinuousScheduler:
         done.extend(self._shed_expired(t0))
         if (self._waiting() == 0 and not self.active
                 and self._chunking is None):
+            if obs is not None:
+                # an arrival-gap sleep (or a no-op boundary) is not an
+                # engine step — keep it out of the step histograms
+                self._phase["idle"] = 1.0
             if self._backlog_pos < len(self.backlog):
                 # idle until the next arrival (virtual clock = wall
                 # clock). Failures due at this step boundary still apply
@@ -1028,14 +1101,72 @@ class ContinuousScheduler:
                 time.sleep(max(
                     0.0, self.backlog[self._backlog_pos].arrival_s - now))
             return self._deliver(done, on_completion)
+        wa = time.perf_counter()
         done.extend(self._apply_failures(t0))
         self._advance_chunked(t0)
         done.extend(self._admit(t0))
+        if obs is not None:
+            # admission machinery = this whole region minus the prefill
+            # compute the leaf helpers attributed to their own phase
+            self._phase["admission"] = (
+                time.perf_counter() - wa - self._phase.get("prefill", 0.0))
         if self.active:
             done.extend(self._decode_step(t0))
         if self.sched.debug:
             self._check_invariants()
         return self._deliver(done, on_completion)
+
+    # -- observability hooks (self.obs is not None on every call) -----------
+
+    def _obs_now(self) -> float:
+        return time.perf_counter() - self._obs_epoch
+
+    def _obs_step_done(self, w0: float, w1: float) -> None:
+        ph = self._phase
+        if "idle" in ph:
+            return
+        m = self._m
+        m["step"].observe(w1 - w0)
+        for k in ("admission", "prefill", "decode", "sampling", "kv"):
+            if k in ph:
+                m["step_" + k].observe(ph[k])
+        alloc = self.alloc
+        if alloc is not None:
+            m["blocks"].observe(alloc.in_use)
+        args = {k: round(v * 1e3, 4) for k, v in ph.items()}
+        args.update(active=len(self.active), queued=self._waiting())
+        self.obs.tracer.complete(
+            "engine", "steps", f"step {self.step_count}",
+            w0 - self._obs_epoch, w1 - w0, args=args)
+
+    def _obs_dequeue(self, ticket: _Ticket) -> None:
+        """Close the request's queued span (admission pop, queue-side
+        shed/cancel — every way a ticket leaves the waiting set)."""
+        self.obs.tracer.async_end(
+            "engine", "queue", ticket.req.id, self._obs_now())
+
+    def _obs_slot_begin(self, ticket: _Ticket, slot: int,
+                        matched: int) -> None:
+        ts = self._obs_now()
+        tr = self.obs.tracer
+        tr.begin("engine", f"slot {slot}", f"req {ticket.req.id}", ts,
+                 args={"prompt_tokens": len(ticket.req.prompt),
+                       "restarts": ticket.restarts})
+        if matched:
+            tr.instant("engine", f"slot {slot}", "prefix-hit", ts,
+                       args={"request": ticket.req.id,
+                             "matched_rows": matched})
+
+    def _obs_prefill(self, slot: int, name: str, tp: float, dt: float,
+                     tokens: int) -> None:
+        """Attribute one prefill compute burst: phase accounting, the
+        chunk-size histogram, and an X span nested in the slot track.
+        ``tp`` is the raw perf_counter() start stamp."""
+        self._phase["prefill"] = self._phase.get("prefill", 0.0) + dt
+        self._m["chunk"].observe(tokens)
+        self.obs.tracer.complete("engine", f"slot {slot}", name,
+                                 tp - self._obs_epoch, dt,
+                                 args={"tokens": tokens})
 
     def kv_stats(self) -> Dict[str, float]:
         """KV-memory accounting for the serving bench: what a dense
@@ -1047,10 +1178,12 @@ class ContinuousScheduler:
         """Lifecycle counters accumulated so far (the serving bench
         reports preemptions when sweeping the admission watermark)."""
         c = Counter(e.kind for e in self.events)
-        return {"admissions": c["admit"], "evictions": c["evict"],
+        return {"requests_submitted": self._submit_seq,
+                "admissions": c["admit"], "evictions": c["evict"],
                 "preemptions": c["preempt"], "slot_failures": c["fail"],
                 "cancellations": c["cancel"], "sheds": c["shed"],
                 "steps": self.step_count,
+                "tokens_generated": self.tokens_generated,
                 "prefix_hits": getattr(self.layout, "prefix_hits", 0),
                 "prefill_tokens_total": self.prefill_tokens_total,
                 "prefill_tokens_saved": self.prefill_tokens_saved}
@@ -1072,12 +1205,24 @@ class ContinuousScheduler:
                 on_completion(c)
         return done
 
+    def _event(self, t_s: float, kind: str, rid: int, slot: int) -> None:
+        """Record a lifecycle event; disruptions (preempt/fail/shed/
+        cancel) additionally land as instant markers on the trace track
+        of the slot (or the queue, for never-admitted requests)."""
+        self.events.append(SchedEvent(t_s, kind, rid, slot, self.step_count))
+        if self.obs is not None and kind in ("preempt", "fail",
+                                             "shed", "cancel"):
+            thread = f"slot {slot}" if slot >= 0 else "queue"
+            self.obs.tracer.instant("engine", thread, kind, self._obs_now(),
+                                    args={"request": rid})
+
     def _emit(self, ticket: _Ticket, tok: int) -> None:
         """Append a token and stream it to the handle. After a failure
         re-queue the greedy re-decode re-produces the already-streamed
         prefix; the handle dedups by index so consumers see each token
         once."""
         ticket.emitted.append(tok)
+        self.tokens_generated += 1
         if ticket.handle is not None:
             ticket.handle._emit(len(ticket.emitted) - 1, tok)
 
@@ -1102,6 +1247,11 @@ class ContinuousScheduler:
         self.cache_len[slot] = 0
         self.tokens[slot] = 0
         self.layout.release(slot)
+        if self.obs is not None:
+            # every occupied slot opened its span at admission; closing
+            # here covers every exit path (finish/evict/preempt/fail/
+            # shed/cancel, mid-chunking included)
+            self.obs.tracer.end("engine", f"slot {slot}", self._obs_now())
 
     @staticmethod
     def _reset_ticket(ticket: _Ticket) -> None:
@@ -1133,6 +1283,8 @@ class ContinuousScheduler:
             elif ticket.where == "queued":
                 ticket.retired = True           # lazy heap deletion
                 self._queue_stale += 1
+                if self.obs is not None:
+                    self._obs_dequeue(ticket)
                 out.append(self._cancel_ticket(ticket, t0))
             elif ticket.where == "active":
                 out.append(self._evict(ticket.slot, t0, "cancelled",
@@ -1147,8 +1299,7 @@ class ContinuousScheduler:
     def _cancel_ticket(self, ticket: _Ticket, t0: float,
                        slot: int = -1) -> Completion:
         now = time.perf_counter() - t0
-        self.events.append(SchedEvent(now, "cancel", ticket.req.id, slot,
-                                      self.step_count))
+        self._event(now, "cancel", ticket.req.id, slot)
         return self._finish(ticket, "cancelled", t0)
 
     def _shed_expired(self, t0: float) -> List[Completion]:
@@ -1179,6 +1330,8 @@ class ContinuousScheduler:
             elif ticket.where == "queued":
                 ticket.retired = True       # lazy heap deletion
                 self._queue_stale += 1
+                if self.obs is not None:
+                    self._obs_dequeue(ticket)
                 out.append(self._shed_ticket(ticket, t0))
             elif ticket.where == "active":
                 out.append(self._evict(ticket.slot, t0, "timeout",
@@ -1193,8 +1346,7 @@ class ContinuousScheduler:
     def _shed_ticket(self, ticket: _Ticket, t0: float,
                      slot: int = -1) -> Completion:
         now = time.perf_counter() - t0
-        self.events.append(SchedEvent(now, "shed", ticket.req.id, slot,
-                                      self.step_count))
+        self._event(now, "shed", ticket.req.id, slot)
         return self._finish(ticket, "timeout", t0)
 
     def _retire_from_admission(self, ticket: _Ticket,
@@ -1205,6 +1357,8 @@ class ContinuousScheduler:
         more token after cancel() returns' contract covers the first
         token too."""
         heapq.heappop(self.queue)
+        if self.obs is not None:
+            self._obs_dequeue(ticket)
         return self._cancel_ticket(ticket, t0)
 
     def _requeue_or_fail(self, victims: List[_Ticket],
@@ -1258,15 +1412,13 @@ class ContinuousScheduler:
             for slot in slots:
                 ticket = self.active.pop(slot)
                 self._release_slot(slot)
-                self.events.append(SchedEvent(now, "fail", ticket.req.id,
-                                              slot, self.step_count))
+                self._event(now, "fail", ticket.req.id, slot)
                 victims.append(ticket)
             st = self._chunking
             if st is not None and (f.slots is None or st.slot in f.slots):
                 self._chunking = None
                 self._release_slot(st.slot)
-                self.events.append(SchedEvent(now, "fail", st.ticket.req.id,
-                                              st.slot, self.step_count))
+                self._event(now, "fail", st.ticket.req.id, st.slot)
                 victims.append(st.ticket)
             out.extend(self._requeue_or_fail(victims, t0))
         return out
@@ -1291,6 +1443,8 @@ class ContinuousScheduler:
                 # expired while queued behind this pass's earlier
                 # prefills: shed before prefill, not after
                 heapq.heappop(self.queue)
+                if self.obs is not None:
+                    self._obs_dequeue(ticket)
                 out.append(self._shed_ticket(ticket, t0))
                 continue
             r = ticket.req
@@ -1307,6 +1461,11 @@ class ContinuousScheduler:
             self.layout.bind(slot, res)
             self.prefill_tokens_total += len(r.prompt)
             matched = getattr(res, "matched_rows", 0)
+            if self.obs is not None:
+                self._m["queue_wait"].observe(
+                    time.perf_counter() - t0 - ticket.queued_at_s)
+                self._obs_dequeue(ticket)
+                self._obs_slot_begin(ticket, slot, matched)
             if chunked:
                 # resume at the last chunk boundary inside the matched
                 # region, so every extend step keeps the compiled chunk
@@ -1338,7 +1497,10 @@ class ContinuousScheduler:
         self.layout.insert(req_cache, slot)
         if self._prefix and r.embeds is None:
             self.layout.register_prefix(slot, r.prompt)
-        ticket.prefill_s += time.perf_counter() - tp
+        dt = time.perf_counter() - tp
+        ticket.prefill_s += dt
+        if self.obs is not None:
+            self._obs_prefill(slot, "prefill", tp, dt, len(r.prompt))
         first = int(self.sampler(logits)[0])
         self._activate(ticket, slot, first, int(clen[0]), t0)
 
@@ -1363,7 +1525,11 @@ class ContinuousScheduler:
             jnp.full((1,), matched, jnp.int32)))
         self.layout.insert_scratch(scratch, slot)
         self.layout.register_prefix(slot, r.prompt)
-        ticket.prefill_s += time.perf_counter() - tp
+        dt = time.perf_counter() - tp
+        ticket.prefill_s += dt
+        if self.obs is not None:
+            self._obs_prefill(slot, "prefill (prefix resume)", tp, dt,
+                              len(r.prompt) - matched)
         self.prefill_tokens_saved += matched
         first = int(self.sampler(logits[:, -1])[0])
         self._activate(ticket, slot, first, len(r.prompt), t0)
@@ -1385,7 +1551,10 @@ class ContinuousScheduler:
         logits, st.cache, _ = jax.block_until_ready(self._extend_fn(
             self.params, jnp.asarray(chunk[None]), st.cache,
             jnp.full((1,), st.pos, jnp.int32)))
-        st.ticket.prefill_s += time.perf_counter() - tp
+        dt = time.perf_counter() - tp
+        st.ticket.prefill_s += dt
+        if self.obs is not None:
+            self._obs_prefill(st.slot, "prefill chunk", tp, dt, real)
         st.pos += real
         if st.pos < len(r.prompt):
             return
@@ -1405,8 +1574,10 @@ class ContinuousScheduler:
         self.cache_len[slot] = clen
         self.tokens[slot] = first
         self.active[slot] = ticket
-        self.events.append(SchedEvent(ticket.first_token_s, "admit",
-                                      ticket.req.id, slot, self.step_count))
+        self._event(ticket.first_token_s, "admit", ticket.req.id, slot)
+        if self.obs is not None:
+            self._m["ttft"].observe(ticket.first_token_s - ticket.arrival_s)
+            ticket.last_emit_s = ticket.first_token_s
 
     def _finished(self, ticket: _Ticket) -> bool:
         return len(ticket.emitted) >= ticket.req.max_new_tokens
@@ -1435,8 +1606,7 @@ class ContinuousScheduler:
             ticket = self.active.pop(slot)
         self._release_slot(slot)
         now = time.perf_counter() - t0
-        self.events.append(SchedEvent(now, "preempt", ticket.req.id, slot,
-                                      self.step_count))
+        self._event(now, "preempt", ticket.req.id, slot)
         out = self._requeue_or_fail([ticket], t0)
         return out[0] if out else None
 
@@ -1471,15 +1641,31 @@ class ContinuousScheduler:
 
     def _decode_step(self, t0: float) -> List[Completion]:
         done: List[Completion] = []
+        obs = self.obs
         # Requests satisfied by the prefill token alone never decode.
         for slot in [s for s, tk in self.active.items() if self._finished(tk)]:
             done.append(self._evict(slot, t0, "length"))
         if not self.active:
             return done
+        wk = time.perf_counter()
         done.extend(self._grow_blocks(t0))
+        if obs is not None:
+            wd = time.perf_counter()
+            self._phase["kv"] = self._phase.get("kv", 0.0) + (wd - wk)
         logits = self.layout.decode(self.params, jnp.asarray(self.tokens),
                                     jnp.asarray(self.cache_len))
+        if obs is not None:
+            # force the async dispatch so decode vs sampling attribution
+            # is real; values are untouched, so greedy identity holds
+            logits = jax.block_until_ready(logits)
+            ws = time.perf_counter()
+            self._phase["decode"] = self._phase.get("decode", 0.0) + (ws - wd)
         toks = np.asarray(self.sampler(logits))
+        if obs is not None:
+            now_s = time.perf_counter()
+            self._phase["sampling"] = \
+                self._phase.get("sampling", 0.0) + (now_s - ws)
+            now_s -= t0
         self.step_count += 1
         for slot in self.active:     # free slots keep cache_len == 0
             self.cache_len[slot] += 1
@@ -1496,6 +1682,9 @@ class ContinuousScheduler:
                 done.append(self._evict(slot, t0, "eos"))
                 continue
             self._emit(ticket, t)
+            if obs is not None:
+                self._m["inter_token"].observe(now_s - ticket.last_emit_s)
+                ticket.last_emit_s = now_s
             self.tokens[slot] = t
             if self._finished(ticket):
                 done.append(self._evict(slot, t0, "length"))
@@ -1506,8 +1695,7 @@ class ContinuousScheduler:
         ticket = self.active.pop(slot)
         self._release_slot(slot)
         now = time.perf_counter() - t0
-        self.events.append(SchedEvent(now, kind, ticket.req.id, slot,
-                                      self.step_count))
+        self._event(now, kind, ticket.req.id, slot)
         return self._finish(ticket, reason, t0)
 
     def _check_invariants(self) -> None:

@@ -19,8 +19,16 @@ surface built in ``runtime.engine``:
 * ``GET /health/live`` — process is up (200 always once listening).
 * ``GET /health/ready`` — 200 after the warmup request has compiled
   the prefill/decode kernels, 503 before; load balancers gate on this.
-* ``GET /status`` — queue depth, in-flight count, KV pool occupancy
-  (``Engine.kv_stats``) and lifecycle counters (``Engine.stats``).
+* ``GET /status`` — queue depth, in-flight count, KV pool occupancy,
+  lifecycle counters, and (observability on) histogram summaries — one
+  consistent ``Engine.snapshot()`` taken under the engine's own lock.
+* ``GET /metrics`` — Prometheus text exposition: lifecycle counters and
+  occupancy gauges always; TTFT / inter-token / step-duration /
+  queue-wait / per-phase histograms when the engine was built with
+  ``EngineConfig(observability=True)``.
+* ``GET /trace`` — the engine's Chrome trace-event JSON so far (loads
+  in Perfetto / ``chrome://tracing``; empty-but-valid with
+  observability off).
 
 Backpressure: admission is bounded. At most ``max_inflight`` requests
 may be open (queued + decoding) at once; a ``/generate`` beyond that is
@@ -202,17 +210,19 @@ class EngineServer:
             self._inflight -= 1
 
     def status(self) -> Dict[str, Any]:
-        with self.engine._lock:
-            st = {
-                "ready": self.ready.is_set(),
-                "inflight": self._inflight,
-                "max_inflight": self.config.max_inflight,
-                "queue_depth": self.engine.scheduler._waiting(),
-                "active_slots": len(self.engine.scheduler.active),
-                "kv": self.engine.kv_stats(),
-                "counters": self.engine.stats(),
-            }
+        st = self.engine.snapshot()     # engine state under the engine lock
+        st.update(ready=self.ready.is_set(), inflight=self._inflight,
+                  max_inflight=self.config.max_inflight)
         return st
+
+    def metrics_text(self) -> str:
+        """Prometheus exposition: the engine's registry plus the
+        server-side admission-bound gauges."""
+        with self._inflight_lock:
+            inflight = self._inflight
+        return self.engine.metrics_text(extra_gauges={
+            "repro_http_inflight": float(inflight),
+            "repro_http_max_inflight": float(self.config.max_inflight)})
 
 
 class _Overloaded(RuntimeError):
@@ -258,6 +268,16 @@ class _Handler(BaseHTTPRequestHandler):
                 self._json(503, {"status": "starting"})
         elif self.path == "/status":
             self._json(200, self.srv.status())
+        elif self.path == "/metrics":
+            data = self.srv.metrics_text().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+        elif self.path == "/trace":
+            self._json(200, self.srv.engine.trace_json())
         else:
             self._json(404, {"error": f"no route {self.path!r}"})
 
@@ -341,10 +361,15 @@ def _build_tiny_engine(args):
     return Engine(cfg, params, ec)
 
 
-def _smoke(url: str) -> None:
-    """One streamed request + health/status probes over real HTTP."""
+def _smoke(url: str, trace_out: Optional[str] = None) -> None:
+    """One streamed request + health/status/metrics/trace probes over
+    real HTTP. ``trace_out`` additionally writes the schema-validated
+    Chrome trace to disk (the CI fast-lane artifact)."""
     import http.client
     from urllib.parse import urlparse
+
+    from repro.runtime.observability import (parse_prometheus,
+                                             validate_chrome_trace)
 
     u = urlparse(url)
     conn = http.client.HTTPConnection(u.hostname, u.port, timeout=60)
@@ -368,11 +393,32 @@ def _smoke(url: str) -> None:
     assert r.status == 200, f"/status -> {r.status}"
     st = json.loads(r.read())
     assert st["ready"] and "kv" in st and "counters" in st, st
+    conn.request("GET", "/metrics")
+    r = conn.getresponse()
+    assert r.status == 200, f"/metrics -> {r.status}"
+    metrics = parse_prometheus(r.read().decode())
+    assert metrics["counters"]["repro_admissions_total"] \
+        == st["counters"]["admissions"], (metrics["counters"], st["counters"])
+    if st["observability"]:
+        assert metrics["histograms"]["repro_ttft_seconds"]["count"] >= 1, \
+            metrics["histograms"]
+    conn.request("GET", "/trace")
+    r = conn.getresponse()
+    assert r.status == 200, f"/trace -> {r.status}"
+    trace = json.loads(r.read())
+    n_events = validate_chrome_trace(trace)
+    if st["observability"]:
+        assert n_events > 0, "observability on but the trace is empty"
+    if trace_out:
+        with open(trace_out, "w") as fh:
+            json.dump(trace, fh)
     conn.close()
     print(f"smoke OK: {len(toks)} tokens streamed, "
           f"finish_reason={final['finish_reason']}, "
           f"admissions={st['counters']['admissions']}, "
-          f"sheds={st['counters']['sheds']}")
+          f"sheds={st['counters']['sheds']}, "
+          f"trace_events={n_events}"
+          + (f" -> {trace_out}" if trace_out else ""))
 
 
 def main(argv=None) -> None:
@@ -393,9 +439,15 @@ def main(argv=None) -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="serve a tiny randomly-initialized demo model")
     ap.add_argument("--smoke", action="store_true",
-                    help="start, stream one request, probe health/status, "
-                         "exit (CI liveness gate)")
+                    help="start, stream one request, probe health/status/"
+                         "metrics/trace, exit (CI liveness gate; implies "
+                         "--observability so the probes are meaningful)")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --smoke: write the schema-validated Chrome "
+                         "trace JSON here")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.observability = True
     if not args.tiny:
         ap.error("only --tiny is wired up in this repro (checkpoint "
                  "loading for the real configs is a later PR)")
@@ -411,7 +463,7 @@ def main(argv=None) -> None:
               f"(policy={engine.admission.name}, "
               f"layout={engine.config.kv_layout})", flush=True)
         if args.smoke:
-            _smoke(srv.url)
+            _smoke(srv.url, trace_out=args.trace_out)
             return
         try:
             while True:

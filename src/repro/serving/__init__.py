@@ -19,6 +19,9 @@ this path so internal module reshuffles never break callers. The legacy
 with a ``DeprecationWarning``.
 """
 from repro.runtime.engine import Engine, EngineConfig, RequestHandle
+from repro.runtime.observability import (MetricsRegistry, Observability,
+                                         Tracer, parse_prometheus,
+                                         validate_chrome_trace)
 from repro.runtime.scheduler import (FINISH_REASONS, Completion, Request,
                                      SlotFailure)
 from repro.runtime.server import EngineServer, ServerConfig
@@ -33,4 +36,9 @@ __all__ = [
     "FINISH_REASONS",
     "EngineServer",
     "ServerConfig",
+    "Observability",
+    "MetricsRegistry",
+    "Tracer",
+    "parse_prometheus",
+    "validate_chrome_trace",
 ]

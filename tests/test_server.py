@@ -13,7 +13,10 @@ on) and exercises it over actual sockets with ``http.client``:
 * 429 + Retry-After once ``max_inflight`` requests are open
   (bounded-admission backpressure);
 * wall-clock deadline shed surfaces as ``finish_reason="timeout"``
-  through the HTTP response.
+  through the HTTP response;
+* ``/metrics`` Prometheus exposition agrees with ``/status`` whether
+  observability is on or off, and ``/trace`` always serves a valid
+  (possibly empty) Chrome trace.
 """
 from __future__ import annotations
 
@@ -29,7 +32,8 @@ import pytest
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import (Engine, EngineConfig, EngineServer, Request,
-                           ServerConfig)
+                           ServerConfig, parse_prometheus,
+                           validate_chrome_trace)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -211,6 +215,87 @@ def test_concurrent_http_clients(server):
     assert not errs
     assert [s for s, _ in results] == [200, 200, 200]
     assert all(len(o["tokens"]) == 4 for _, o in results)
+
+
+def test_metrics_without_observability(server):
+    """Counters are mirrored from the scheduler's event log, so
+    /metrics works even with observability off — it just carries no
+    histogram samples."""
+    status, headers, raw = _request(server, "GET", "/metrics")
+    assert status == 200
+    assert headers["Content-Type"].startswith("text/plain")
+    parsed = parse_prometheus(raw.decode())
+    st = json.loads(_request(server, "GET", "/status")[2])
+    assert not st["observability"]
+    assert parsed["counters"]["repro_admissions_total"] \
+        == st["counters"]["admissions"]
+    assert parsed["counters"]["repro_steps_total"] == st["counters"]["steps"]
+    assert parsed["gauges"]["repro_http_max_inflight"] == 3
+    ttft = parsed["histograms"].get("repro_ttft_seconds")
+    assert ttft is None or ttft["count"] == 0
+
+
+def test_trace_empty_without_observability(server):
+    status, _, raw = _request(server, "GET", "/trace")
+    assert status == 200
+    trace = json.loads(raw)
+    assert validate_chrome_trace(trace) == 0
+    assert trace["traceEvents"] == []
+
+
+@pytest.fixture(scope="module")
+def obs_server(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=512, max_slots=2, observability=True))
+    with EngineServer(eng, ServerConfig(port=0, max_inflight=3)) as srv:
+        yield srv
+
+
+def test_metrics_with_observability(obs_server):
+    prompt = [int(t) for t in np.random.RandomState(9).randint(1, 64, 8)]
+    status, out = _generate(obs_server,
+                            {"prompt": prompt, "max_new_tokens": 6})
+    assert status == 200 and len(out["tokens"]) == 6
+
+    status, _, raw = _request(obs_server, "GET", "/metrics")
+    assert status == 200
+    parsed = parse_prometheus(raw.decode())
+    st = json.loads(_request(obs_server, "GET", "/status")[2])
+    assert st["observability"]
+    # exposition and snapshot describe the same state
+    assert parsed["counters"]["repro_admissions_total"] \
+        == st["counters"]["admissions"]
+    snap_hists = st["metrics"]["histograms"]
+    for name in ("repro_ttft_seconds", "repro_inter_token_seconds",
+                 "repro_step_duration_seconds", "repro_queue_wait_seconds"):
+        assert parsed["histograms"][name]["count"] \
+            == snap_hists[name]["count"], name
+    assert snap_hists["repro_ttft_seconds"]["count"] >= 1
+    # cumulative buckets are monotone and end at the total count
+    buckets = parsed["histograms"]["repro_ttft_seconds"]["buckets"]
+    cums = [c for _, c in buckets]
+    assert cums == sorted(cums)
+    assert cums[-1] == parsed["histograms"]["repro_ttft_seconds"]["count"]
+
+
+def test_trace_with_observability(obs_server):
+    prompt = [int(t) for t in np.random.RandomState(10).randint(1, 64, 8)]
+    status, _ = _generate(obs_server, {"prompt": prompt,
+                                       "max_new_tokens": 4})
+    assert status == 200
+    status, _, raw = _request(obs_server, "GET", "/trace")
+    assert status == 200
+    trace = json.loads(raw)
+    assert validate_chrome_trace(trace) > 0
+    names = {e.get("name") for e in trace["traceEvents"]}
+    # request lifecycle spans and step slices are present
+    assert any(isinstance(n, str) and n.startswith("req ") for n in names)
+    assert any(isinstance(n, str) and n.startswith("step ") for n in names)
+    # the engine drain records on the wall clock only
+    cats = {e.get("cat") for e in trace["traceEvents"]
+            if e.get("ph") != "M"}
+    assert cats <= {"wall"}
 
 
 def test_server_rejects_batch_engine(setup):
