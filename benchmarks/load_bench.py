@@ -21,6 +21,12 @@ the numbers that matter to a serving operator:
   backpressure) or expired (``finish_reason="timeout"`` under
   ``--enforce-deadlines``) instead of serving late.
 
+``--sweep R1,R2,...`` additionally re-drives the same trace at each
+Poisson rate against the same live server (deadline-free) and persists
+the per-rate (rate, TTFT p99, throughput) points plus the saturation
+knee — the highest rate whose TTFT p99 stays within 3x of the sweep's
+floor — under ``rate_sweep`` in the result JSON.
+
 The result is persisted as JSON (``BENCH_serving.json``) so the serving
 perf trajectory is recorded in-repo and regression-gated: ``--baseline``
 compares TTFT p99 against a committed run and exits non-zero past
@@ -141,6 +147,42 @@ def _http_get(host: str, port: int, path: str) -> tuple:
         return r.status, r.read()
     finally:
         conn.close()
+
+
+def _sweep_knee(points: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """The TTFT-p99-vs-throughput knee of a rate sweep: the highest
+    offered rate whose TTFT p99 stays within 3x of the best (lowest)
+    p99 observed across the sweep — past that point queueing delay
+    dominates and p99 departs the service-time floor. Falls back to the
+    lowest-rate point when every rate is already past saturation."""
+    pts = sorted(points, key=lambda p: p["rate_per_s"])
+    floor = min(p["ttft_p99_s"] for p in pts) or 1e-9
+    ok = [p for p in pts if p["ttft_p99_s"] <= 3.0 * floor]
+    return dict(ok[-1] if ok else pts[0],
+                criterion="highest rate with ttft_p99 <= 3x sweep floor")
+
+
+def _run_sweep(host: str, port: int, rates: List[float], *, n: int,
+               max_new: int, workers: int, vocab: int,
+               seed: int) -> Dict[str, Any]:
+    """Drive the same trace at each Poisson rate against the same live
+    server (deadline-free: the sweep charts the pure latency/throughput
+    curve, not the shed path) and locate the saturation knee."""
+    points = []
+    for rate in rates:
+        o = run_load(host, port, n=n, rate=rate, max_new=max_new,
+                     workers=workers, deadline_s=0.0, deadline_every=0,
+                     vocab=vocab, seed=seed)
+        pt = {"rate_per_s": rate,
+              "ttft_p50_s": o["ttft_s"]["p50"],
+              "ttft_p99_s": o["ttft_s"]["p99"],
+              "throughput_tok_per_s": o["throughput_tok_per_s"],
+              "completed": o["completed"],
+              "failed": o["failed"]}
+        points.append(pt)
+        print(f"sweep @ {rate:g}/s: ttft p99 {pt['ttft_p99_s'] * 1e3:.1f} ms"
+              f", {pt['throughput_tok_per_s']:.0f} tok/s", flush=True)
+    return {"points": points, "knee": _sweep_knee(points)}
 
 
 def _poisson_schedule(n: int, rate_per_s: float, seed: int) -> List[float]:
@@ -281,6 +323,13 @@ def main(argv=None) -> int:
     ap.add_argument("--deadline-every", type=int, default=4,
                     help="every N-th request carries --deadline-s "
                          "(0 = no deadlines)")
+    ap.add_argument("--sweep", default=None, metavar="R1,R2,...",
+                    help="comma-separated Poisson rates (req/s): after "
+                         "the main run, drive the same trace at each "
+                         "rate against the same server and persist the "
+                         "per-rate (rate, TTFT p99, throughput) points "
+                         "plus the saturation knee under 'rate_sweep' "
+                         "in the result JSON")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="write the result JSON here")
@@ -358,6 +407,15 @@ def main(argv=None) -> int:
                 json.dump(trace, f)
                 f.write("\n")
             print(f"wrote {args.trace_out} ({n_ev} trace events)")
+        if args.sweep:
+            rates = [float(r) for r in args.sweep.split(",") if r.strip()]
+            out["rate_sweep"] = _run_sweep(
+                host, port, rates, n=n, max_new=max_new, workers=workers,
+                vocab=256, seed=args.seed)
+            k = out["rate_sweep"]["knee"]
+            print(f"sweep knee: {k['rate_per_s']:g}/s "
+                  f"(ttft p99 {k['ttft_p99_s'] * 1e3:.1f} ms, "
+                  f"{k['throughput_tok_per_s']:.0f} tok/s)")
     finally:
         if srv is not None:
             srv.close()

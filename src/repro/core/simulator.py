@@ -29,6 +29,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.clocks import UnitClocks
 from repro.core.graph import Actor, ActorType, Fifo, Graph
 from repro.core.mapping import Mapping, PlatformModel
 
@@ -264,7 +265,7 @@ class Simulator:
         order = self.g.topo_order()
         t0 = time.perf_counter()
         src_feed = source_inputs or {}
-        unit_clock: Dict[str, float] = {}
+        unit_clock = UnitClocks()
         source_names = [a.name for a in self.g.sources()]
 
         # Replay state: per-source queues of frames to re-fire, the time
@@ -353,7 +354,7 @@ class Simulator:
                 unit = self._unit(a)
                 # Concurrent per-device clocks: the firing starts once its
                 # inputs have landed AND its unit is free; devices overlap.
-                mstart = max(in_ready, unit_clock.get(unit, 0.0))
+                mstart = unit_clock.start(unit, in_ready)
                 if failures is not None:
                     alive = failures.unit_next_alive(unit, mstart)
                     if alive is None:
@@ -457,7 +458,7 @@ class Simulator:
                     # tokens of the lost frame: finish the whole-frame purge.
                     for fs in fstate.values():
                         fs.purge_frame(frame)
-                unit_clock[unit] = mfinish
+                unit_clock.set(unit, mfinish)
                 result.modeled_makespan_s = max(result.modeled_makespan_s,
                                                 mfinish)
                 if a.is_sink:

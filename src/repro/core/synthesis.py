@@ -26,6 +26,14 @@ program assumes single-rate (HSDF) behaviour per iteration — every actor
 fires once per graph iteration with atr == url == lrl == 1 on every port.
 Multi-rate and variable-rate graphs are executed by the token-accurate
 ``Simulator``; DNN inference graphs (the paper's and ours) are single-rate.
+
+A unit may appear *multiple times* along the dataflow: an
+endpoint→server→endpoint mapping synthesizes into three stage *segments*
+(maximal dependency-respecting runs of one unit), two of them on the
+endpoint. Segments of the same unit share one physical busy clock in
+``run_pipelined`` (they contend, never overlap), and cross-segment edges
+within one unit hand tokens over for free — only genuinely cross-unit
+channels are charged against the platform's links.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.clocks import UnitClocks
 from repro.core.graph import Actor, Fifo, Graph
 from repro.core.mapping import Mapping
 
@@ -55,10 +64,14 @@ class Channel:
 
 @dataclass
 class Stage:
-    """All actors mapped to one processing unit, in precedence order."""
+    """One stage *segment*: a maximal dependency-respecting run of actors
+    on one processing unit, in precedence order. ``key`` is the segment's
+    unique name — the bare unit name for a unit's first segment (so every
+    pre-existing mapping keeps its stage keys), ``unit#k`` for revisits."""
 
     unit: str
     actors: List[Actor]
+    key: str = ""
     # Channels whose dst is in this stage (RX) / src is in this stage (TX).
     rx: List[Channel] = field(default_factory=list)
     tx: List[Channel] = field(default_factory=list)
@@ -67,34 +80,58 @@ class Stage:
 def split(g: Graph, mapping: Mapping) -> Tuple[List[Stage], List[Channel]]:
     """Partition ``g`` by the mapping; derive boundary channels.
 
-    Stages are ordered so that every channel flows from an earlier stage to
-    a later one when possible (pipeline order). Cyclic unit dependencies
-    (legal in the MoC via delay tokens) keep declaration order.
+    Stages are segments, not whole units: walking the topo order, an
+    actor joins its unit's latest segment when every producer it depends
+    on lives in that segment or earlier, and opens a *new* segment of the
+    same unit otherwise. A mapping that visits each unit once therefore
+    splits exactly as before (one stage per unit); an
+    endpoint→server→endpoint mapping yields three segments instead of
+    fusing the endpoint's halves into one stage that would need the
+    server's output before the server ran. Channels are emitted for every
+    edge crossing a *segment* boundary — cross-unit ones carry the
+    platform's link charge, same-unit ones (a unit handing tokens to its
+    own later segment) are free. Cyclic unit dependencies (legal in the
+    MoC via delay tokens) keep declaration order, as before.
     """
     order = g.topo_order()
-    units_in_order: List[str] = []
+    stages: List[Stage] = []
+    seg_of: Dict[str, int] = {}         # actor name -> segment index
+    last_seg: Dict[str, int] = {}       # unit -> its latest segment index
+    seg_count: Dict[str, int] = {}      # unit -> segments opened so far
     for a in order:
         u = mapping.unit_of(a.name)
-        if u not in units_in_order:
-            units_in_order.append(u)
-    stages = {u: Stage(unit=u, actors=[]) for u in units_in_order}
-    for a in order:
-        stages[mapping.unit_of(a.name)].actors.append(a)
+        # latest segment any producer of this actor lives in (back edges
+        # from delay tokens resolve later; treat them as unconstraining)
+        dep = max((seg_of.get(p.fifo.src.actor.name, -1)
+                   for p in a.in_ports if p.fifo is not None), default=-1)
+        si = last_seg.get(u, -1)
+        if si >= 0 and si >= dep:
+            stages[si].actors.append(a)
+            seg_of[a.name] = si
+        else:
+            k = seg_count.get(u, 0)
+            stages.append(Stage(unit=u, actors=[a],
+                                key=u if k == 0 else f"{u}#{k}"))
+            seg_count[u] = k + 1
+            last_seg[u] = seg_of[a.name] = len(stages) - 1
 
     channels: List[Channel] = []
-    for f in mapping.boundary_edges(g):
-        su = mapping.unit_of(f.src.actor.name)
-        du = mapping.unit_of(f.dst.actor.name)
+    for f in g.fifos.values():
+        src, dst = f.src.actor.name, f.dst.actor.name
+        if seg_of.get(src) == seg_of.get(dst):
+            continue                    # intra-segment edge: env hand-off
+        su = mapping.unit_of(src)
+        du = mapping.unit_of(dst)
         ch = Channel(
             name=f"ch:{f.name}", src_unit=su, dst_unit=du,
-            src_actor=f.src.actor.name, src_port=f.src.name,
-            dst_actor=f.dst.actor.name, dst_port=f.dst.name,
+            src_actor=src, src_port=f.src.name,
+            dst_actor=dst, dst_port=f.dst.name,
             token_shape=f.src.token_shape, token_dtype=f.src.token_dtype,
             token_bytes=f.token_bytes)
         channels.append(ch)
-        stages[su].tx.append(ch)
-        stages[du].rx.append(ch)
-    return [stages[u] for u in units_in_order], channels
+        stages[seg_of[src]].tx.append(ch)
+        stages[seg_of[dst]].rx.append(ch)
+    return stages, channels
 
 
 class StageFn:
@@ -115,6 +152,7 @@ class StageFn:
         self.g = g
         self.stage = stage
         self.unit = stage.unit
+        self.key = stage.key or stage.unit
         self._member = {a.name for a in stage.actors}
         # Precompute wiring: for each actor input port, where does its
         # token come from (an intra-stage edge value or an RX channel)?
@@ -208,7 +246,7 @@ class StagedProgram:
         tokens: Dict[str, Any] = {}
         sinks: Dict[str, Any] = {}
         for st in self.stages:
-            fn = self.stage_fns[st.unit]
+            fn = self.stage_fns[st.key or st.unit]
             rx = {c.name: tokens[c.name] for c in st.rx}
             tx, sk = fn(external_inputs, rx)
             tokens.update(tx)
@@ -240,10 +278,11 @@ class StagedProgram:
             raise ValueError(f"arrivals has {len(arrivals)} entries for "
                              f"{len(frames)} frames")
         arrivals = arrivals or [0.0] * len(frames)
-        stage_s = {st.unit: (platform.stage_time_s(st.unit, st.actors)
-                             if platform else 0.0)
-                   for st in self.stages}
-        unit_clock = {st.unit: 0.0 for st in self.stages}
+        stage_s = [platform.stage_time_s(st.unit, st.actors)
+                   if platform else 0.0 for st in self.stages]
+        # clocks are per PHYSICAL unit: two segments of the same unit
+        # (an endpoint→server→endpoint mapping) contend for one clock
+        unit_clock = UnitClocks()
         sched = PipelineSchedule()
         sinks_per_frame: List[Dict[str, Any]] = []
         seq_clock = 0.0   # sequential baseline: one frame at a time
@@ -253,26 +292,26 @@ class StagedProgram:
             sinks: Dict[str, Any] = {}
             frame_cost = 0.0
             frame_done = 0.0
-            for st in self.stages:
+            for si, st in enumerate(self.stages):
                 ready = arrivals[fi]
                 for c in st.rx:
                     ready = max(ready, tok_ready[c.name])
-                start = max(ready, unit_clock[st.unit])
-                finish = start + stage_s[st.unit]
-                frame_cost += stage_s[st.unit]
+                start = unit_clock.start(st.unit, ready)
+                finish = start + stage_s[si]
+                frame_cost += stage_s[si]
                 rx = {c.name: tokens[c.name] for c in st.rx}
-                tx, sk = self.stage_fns[st.unit](frame, rx)
+                tx, sk = self.stage_fns[st.key or st.unit](frame, rx)
                 tokens.update(tx)
                 sinks.update(sk)
                 for c in st.tx:
                     block_s = delay_s = 0.0
-                    if platform is not None:
+                    if platform is not None and c.src_unit != c.dst_unit:
                         _, _, block_s, delay_s = platform.boundary_charge_s(
                             c.src_unit, c.dst_unit, c.token_bytes)
                     tok_ready[c.name] = finish + delay_s
                     frame_cost += delay_s
                     finish += block_s
-                unit_clock[st.unit] = finish
+                unit_clock.set(st.unit, finish)
                 sched.unit_busy_s[st.unit] = (
                     sched.unit_busy_s.get(st.unit, 0.0) + finish - start)
                 sched.entries.append(StageExec(fi, st.unit, start, finish))
@@ -286,13 +325,16 @@ class StagedProgram:
         return sinks_per_frame, sched
 
     def comm_bytes_per_iteration(self) -> int:
-        return sum(c.token_bytes for c in self.channels)
+        """Bytes that actually cross a device boundary per iteration —
+        same-unit cross-segment hand-offs are in-memory and free."""
+        return sum(c.token_bytes for c in self.channels
+                   if c.src_unit != c.dst_unit)
 
 
 def synthesize(g: Graph, mapping: Mapping) -> StagedProgram:
     """The Edge-PRUNE 'compiler': graph + mapping -> staged program."""
     stages, channels = split(g, mapping)
-    fns = {st.unit: StageFn(g, st) for st in stages}
+    fns = {st.key or st.unit: StageFn(g, st) for st in stages}
     return StagedProgram(g, mapping, stages, channels, fns)
 
 

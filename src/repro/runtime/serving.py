@@ -106,7 +106,13 @@ class ServeEngine:
 class PartitionedServeEngine:
     """Serves prefill through a VR-PRUNE StagedProgram: the model's actor
     graph split by a mapping (endpoint/server or pod0/pod1), TX/RX channels
-    auto-inserted at the boundary — Edge-PRUNE Sec III.B applied to LLMs."""
+    auto-inserted at the boundary — Edge-PRUNE Sec III.B applied to LLMs.
+
+    A unit may appear in several pipeline segments (endpoint → server →
+    endpoint offload mappings): ``synthesize`` opens a new stage per
+    revisit, ``run_pipelined`` keys its clocks by *physical* unit so the
+    revisits contend for it, and ``comm_bytes`` counts only channels
+    that actually cross units."""
 
     def __init__(self, cfg: ModelConfig, params: Any, mapping, *,
                  batch: int = 1, seq: int = 8, group_size: int = 1):

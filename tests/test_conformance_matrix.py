@@ -6,7 +6,9 @@ through test_scheduler.py and test_engine_lifecycle.py): under greedy
 sampling, EVERY serving configuration —
 
     {slotted, slotted+chunked-prefill, paged, paged+chunked-prefill,
-     paged+prefix-cache, paged+chunked+prefix}
+     paged+prefix-cache, paged+chunked+prefix,
+     disaggregated (dedicated prefill unit + 2 decode stages),
+     pipelined-decode (stage-partitioned decode step)}
   x {fifo, priority, deadline-EDF, batch}
   x {evict-latest, lowest-priority}
   x 2 model configs (scan-only depth, and scan+remainder depth)
@@ -65,6 +67,16 @@ LAYOUTS = {
     "paged-chunked-prefix": dict(kv_layout="paged", block_size=8,
                                  num_blocks=18, prefill_chunk=4,
                                  prefix_cache=True),
+    # multi-unit execution core: prefill/decode disaggregation (one
+    # dedicated prefill unit, two decode stages) over the full paged +
+    # chunked feature load, and pipelined stage-partitioned decode on
+    # the slotted layout. Placement/units move modeled time only —
+    # tokens must stay oracle-identical.
+    "disagg": dict(kv_layout="paged", block_size=8, num_blocks=18,
+                   prefill_chunk=4, units=3, prefill_units=1,
+                   decode_stages=2, placement="least-loaded"),
+    "pipelined-decode": dict(kv_layout="slotted", units=2,
+                             prefill_units=0, decode_stages=2),
 }
 
 ADMISSIONS = ("fifo", "priority", "edf", "batch")
@@ -88,6 +100,10 @@ FAST = {
     ("rem", "paged-chunked", "priority", "lowest-priority"),
     ("rem", "paged-prefix", "edf", "lowest-priority"),
     ("rem", "paged-chunked-prefix", "fifo", "evict-latest"),
+    ("scan", "disagg", "fifo", "evict-latest"),
+    ("rem", "disagg", "priority", "lowest-priority"),
+    ("scan", "pipelined-decode", "fifo", "evict-latest"),
+    ("rem", "pipelined-decode", "edf", "evict-latest"),
 }
 
 
@@ -96,7 +112,8 @@ def _cells():
                                                 ADMISSIONS, PREEMPTIONS):
         if adm == "batch" and lay != "slotted":
             continue        # rejected combination (engine raises; see below)
-        if lay.startswith("slotted") and pre != "evict-latest":
+        if LAYOUTS[lay].get("kv_layout") == "slotted" \
+                and pre != "evict-latest":
             continue        # no pool -> preemption never engages; one
             #                 representative per slotted cell is enough
         marks = () if (cfg, lay, adm, pre) in FAST else (pytest.mark.slow,)
