@@ -30,7 +30,9 @@ floor — under ``rate_sweep`` in the result JSON.
 The result is persisted as JSON (``BENCH_serving.json``) so the serving
 perf trajectory is recorded in-repo and regression-gated: ``--baseline``
 compares TTFT p99 against a committed run and exits non-zero past
-``--max-regression`` (CI nightly gate).
+``--max-regression``, and — when both runs carry a ``rate_sweep`` — the
+saturation-knee *rate* against ``--max-knee-regression`` (the capacity
+gate next to the latency gate; both run in CI nightly).
 
 By default the bench self-hosts an ``EngineServer`` on a tiny model and
 an ephemeral port (so it runs anywhere, CI included); ``--url`` points
@@ -343,6 +345,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-regression", type=float, default=0.20,
                     help="fail if TTFT p99 exceeds baseline by more than "
                          "this fraction")
+    ap.add_argument("--max-knee-regression", type=float, default=0.25,
+                    help="with --baseline and --sweep: fail if the "
+                         "saturation-knee rate drops below the baseline "
+                         "knee by more than this fraction (the capacity "
+                         "gate next to the latency gate)")
     args = ap.parse_args(argv)
 
     n = args.requests or (24 if args.tiny else 200)
@@ -445,6 +452,25 @@ def main(argv=None) -> int:
         if cur_p99 > limit:
             print(f"FAIL: TTFT p99 regressed past "
                   f"{args.max_regression:.0%}", file=sys.stderr)
+            rc = 1
+        # capacity gate: the saturation knee (highest rate the server
+        # absorbs before TTFT p99 departs the service-time floor) must
+        # not slide down vs. the committed run
+        base_knee = base.get("rate_sweep", {}).get("knee")
+        cur_knee = out.get("rate_sweep", {}).get("knee")
+        if base_knee and cur_knee:
+            floor = base_knee["rate_per_s"] * (1.0 - args.max_knee_regression)
+            print(f"sweep knee: {cur_knee['rate_per_s']:g}/s vs baseline "
+                  f"{base_knee['rate_per_s']:g}/s (floor {floor:g}/s)")
+            if cur_knee["rate_per_s"] < floor:
+                print(f"FAIL: saturation knee regressed past "
+                      f"{args.max_knee_regression:.0%} "
+                      f"({cur_knee['rate_per_s']:g}/s < {floor:g}/s)",
+                      file=sys.stderr)
+                rc = 1
+        elif base_knee and not cur_knee:
+            print("FAIL: baseline has a rate_sweep knee but this run "
+                  "was not driven with --sweep", file=sys.stderr)
             rc = 1
     return rc
 

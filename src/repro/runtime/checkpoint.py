@@ -1,6 +1,12 @@
 """Pytree checkpointing to a single .npz (path-flattened), plus a sidecar
 JSON with the step counter and config name. Restore rebuilds the exact
-pytree structure from a template (e.g. ``jax.eval_shape(init_params)``)."""
+pytree structure from a template (e.g. ``jax.eval_shape(init_params)``).
+
+``load_flat`` is the template-free inverse of ``save`` for consumers
+that persist *plain dicts of arrays* rather than model pytrees — the
+escalation journal (``runtime.escalation``) serializes each queued
+request through ``save``/``load_flat`` so its on-disk records share the
+checkpoint format."""
 from __future__ import annotations
 
 import json
@@ -39,6 +45,14 @@ def restore(path: str, template: Any) -> Any:
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    """Load a ``save``d file as the flat ``{path: array}`` dict it was
+    written from, without a pytree template. The journal's record format:
+    callers that saved a plain dict get the same dict back."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return {k: data[k] for k in data.files}
 
 
 def load_meta(path: str) -> Dict:

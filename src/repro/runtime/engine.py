@@ -51,8 +51,10 @@ path for all of the above is the ``repro.serving`` package.
 from __future__ import annotations
 
 import asyncio
+import collections
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import (Any, AsyncIterator, Callable, Dict, Iterator, List,
                     Optional, Tuple)
@@ -117,6 +119,11 @@ class EngineConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # wall-clock device-speed handicap: sleep this long after every
+    # non-idle scheduler step — emulates a slower device (e.g. the edge
+    # endpoint tier of a TieredEngine when both tiers share one host).
+    # Content-neutral: tokens are bit-identical at any value.
+    step_delay_s: float = 0.0
     debug: bool = False         # step-boundary invariant asserts
     # metrics + lifecycle tracing (runtime.observability): histograms,
     # per-request spans, per-step phase breakdown, /trace export. Off by
@@ -263,7 +270,7 @@ class RequestHandle:
             return
         self._cancelled = True
         if self._ticket is not None:
-            with self._engine._lock:
+            with self._engine._entry_lock():
                 self._engine.scheduler.request_cancel(self._ticket)
 
     def on_token(self, cb: Callable[[int], None]) -> Callable[[int], None]:
@@ -414,6 +421,20 @@ class Engine:
         # deadlock. Lock order is engine._lock -> handle._cond, never
         # the inverse: handles wait on _cond without the engine lock.
         self._lock = threading.RLock()
+        # anti-convoy turnstile: the drain loop releases _lock between
+        # steps but reacquires it immediately, and under the GIL a
+        # submit/snapshot caller can lose that race for the length of
+        # the whole backlog. Callers enter through _gate; the drain
+        # loop passes through it (acquire+release) once per iteration,
+        # so a waiter holding _gate is guaranteed the very next
+        # critical section — worst-case wait is one scheduler step.
+        self._gate = threading.Lock()
+        # lock-free submission handoff: while the background drain runs,
+        # submit() appends here (deque ops are atomic) and the drain
+        # ingests at its next step boundary. A step can be long (an
+        # admission burst of prefills, a fresh compile) and submit sits
+        # on the caller's latency path — it must never wait one out.
+        self._inbox: "collections.deque" = collections.deque()
         self._drain_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._work = threading.Event()      # set on submit, wakes the drain
@@ -465,7 +486,7 @@ class Engine:
                     enforce_deadlines=c.enforce_deadlines,
                     units=c.units, prefill_units=c.prefill_units,
                     decode_stages=c.decode_stages, placement=c.placement,
-                    debug=c.debug),
+                    step_delay_s=c.step_delay_s, debug=c.debug),
                 failures=failures, admission=self.admission,
                 preemption=self.preemption,
                 obs=self.obs if c.observability else None)
@@ -513,9 +534,46 @@ class Engine:
     def __exit__(self, *exc) -> None:
         self.shutdown()
 
+    @contextmanager
+    def _entry_lock(self):
+        """Take the engine lock fairly: non-drain threads pass through
+        the turnstile first, so the drain loop cannot starve them (see
+        ``_gate``). The drain thread itself skips the gate — a cancel()
+        or submit() fired from inside a token callback already holds
+        ``_lock`` re-entrantly, and parking it on the gate while a
+        caller waits for ``_lock`` would deadlock both."""
+        if threading.current_thread() is self._drain_thread:
+            with self._lock:
+                yield
+            return
+        with self._gate:
+            with self._lock:
+                yield
+
+    def _ingest_inbox(self) -> None:
+        """Move handed-off submissions into the scheduler (caller holds
+        ``_lock``). Stamps wall-clock arrivals from the *submit* instant
+        — ingestion lag must not shift a request's arrival time — and
+        honours a cancel() that raced the handoff."""
+        while self._inbox:
+            handle, req, arrival_s, t_sub = self._inbox.popleft()
+            s = self.scheduler
+            if not arrival_s and s._t0 is not None and not s.done:
+                arrival_s = max(0.0, t_sub - s._t0)
+            handle._ticket = s.submit(req, arrival_s)
+            handle._ticket.handle = handle
+            if handle._cancelled:
+                s.request_cancel(handle._ticket)
+
     def _drain_loop(self) -> None:
         while not self._stop.is_set():
+            # turnstile pass: if a snapshot/cancel caller is parked in
+            # _entry_lock, block here until it has taken (and released)
+            # the engine lock — fairness over throughput
+            self._gate.acquire()
+            self._gate.release()
             with self._lock:
+                self._ingest_inbox()
                 idle = self.scheduler.done
                 if not idle:
                     self._work.clear()
@@ -544,14 +602,20 @@ class Engine:
             validate_request_fits(self.cfg, req, self.max_len)
             self._pending.append(handle)
             return handle
-        with self._lock:
-            s = self.scheduler
-            if (self.running and not arrival_s and s._t0 is not None
-                    and not s.done):
-                # mid-epoch wall-clock arrival (an idle/done scheduler
-                # starts a fresh epoch inside submit, where 0 is correct)
-                arrival_s = time.perf_counter() - s._t0
-            handle._ticket = s.submit(req, arrival_s)
+        if self.running:
+            # lock-free handoff: validate here (errors must surface on
+            # the caller, not kill the drain thread), then hand the
+            # request to the drain loop — submit never waits out a
+            # scheduler step (admission bursts and fresh compiles can
+            # hold the engine lock for a long time)
+            validate_request_fits(self.cfg, req, self.max_len)
+            self.scheduler.layout.validate(req)
+            self._inbox.append((handle, req, arrival_s, time.perf_counter()))
+            self._work.set()
+            return handle
+        with self._entry_lock():
+            self._ingest_inbox()        # shutdown raced an earlier handoff
+            handle._ticket = self.scheduler.submit(req, arrival_s)
             handle._ticket.handle = handle
         self._work.set()
         return handle
@@ -568,7 +632,8 @@ class Engine:
             raise RuntimeError(
                 "the background drain thread owns the step loop; wait on "
                 "RequestHandle.result()/stream() or shutdown() first")
-        with self._lock:
+        with self._entry_lock():
+            self._ingest_inbox()        # handoffs left by a shutdown()
             if self.scheduler.done:
                 return []
             return self.scheduler.step_once()
@@ -584,6 +649,8 @@ class Engine:
             raise RuntimeError(
                 "the background drain thread owns the step loop; wait on "
                 "RequestHandle.result()/stream() or shutdown() first")
+        with self._lock:
+            self._ingest_inbox()        # handoffs left by a shutdown()
         return self.scheduler.run(on_completion)
 
     # -- asyncio surface ----------------------------------------------------
@@ -648,7 +715,7 @@ class Engine:
         observability is on) histogram summaries. The only sanctioned
         way for other threads — the HTTP server above all — to read
         engine state."""
-        with self._lock:
+        with self._entry_lock():
             if self.scheduler is None:
                 snap: Dict[str, Any] = {
                     "queue_depth": len(self._pending),
@@ -659,7 +726,7 @@ class Engine:
             else:
                 s = self.scheduler
                 snap = {
-                    "queue_depth": s._waiting(),
+                    "queue_depth": s._waiting() + len(self._inbox),
                     "active_slots": len(s.active),
                     "kv": s.kv_stats(),
                     "counters": s.stats(),

@@ -25,7 +25,7 @@ of a parallel API.
 from __future__ import annotations
 
 import math
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -215,6 +215,114 @@ class LeastLoadedPlacement:
 
 
 # ---------------------------------------------------------------------------
+# escalation policies
+# ---------------------------------------------------------------------------
+# Whether a request submitted to a TieredEngine (runtime.escalation) is
+# answered by the small local engine or escalated to the server tier.
+# Policies receive an EscalationContext-shaped record exposing:
+#   .req            the Request (priority / deadline_s / max_new_tokens)
+#   .snapshot       lazy local-load view: queue_depth, active_slots and
+#                   best-effort kv occupancy, read lock-free (submit()
+#                   must not convoy behind the engine's drain lock)
+#   .now_s          seconds on the tiered engine's clock
+#   .confidence()   lazy local-model confidence in [0, 1] — the max
+#                   softmax probability of the local model's next-token
+#                   prediction (the LLM analogue of the shallow-head
+#                   gate in examples/early_exit_offload.py). Computed at
+#                   most once per request, and only if some policy asks.
+# ``decide(ctx)`` returns a short reason string to escalate, or None to
+# answer locally. The TieredEngine ORs its policy list: the first
+# non-None reason wins and is recorded on the handle / in the trace.
+
+
+class NeverEscalate:
+    """Local-only: the endpoint answers everything itself (the paper's
+    endpoint-alone baseline; also the privacy-maximal configuration —
+    no request ever leaves the device)."""
+
+    name = "never"
+
+    def decide(self, ctx) -> Optional[str]:
+        return None
+
+
+class AlwaysEscalate:
+    """Server-only: every request escalates (the always-offload baseline
+    the paper's collaborative numbers are compared against)."""
+
+    name = "always"
+
+    def decide(self, ctx) -> Optional[str]:
+        return "always"
+
+
+class ConfidenceEscalation:
+    """Escalate the hard residue: requests the local model is *unsure*
+    about (next-token max softmax probability below ``threshold``) go to
+    the server; confident requests exit early on-device — VR-PRUNE's
+    CA gate (examples/early_exit_offload.py) applied to served traffic,
+    and PAPERS.md's 2-step-pruning escalation criterion."""
+
+    name = "confidence"
+
+    def __init__(self, threshold: float = 0.35):
+        self.threshold = threshold
+
+    def decide(self, ctx) -> Optional[str]:
+        if ctx.confidence() < self.threshold:
+            return "low_confidence"
+        return None
+
+
+class DeadlineRiskEscalation:
+    """Escalate when the local tier probably cannot meet the request's
+    deadline: estimated local completion time (queue ahead + own decode,
+    at ``sec_per_token`` a token) times ``safety`` exceeds the deadline.
+    Deadline-free requests never trip this policy."""
+
+    name = "deadline-risk"
+
+    def __init__(self, sec_per_token: float = 5e-3, safety: float = 1.5):
+        self.sec_per_token = sec_per_token
+        self.safety = safety
+
+    def estimate_local_s(self, ctx) -> float:
+        """Queue-depth-scaled service estimate: every queued request is
+        assumed as long as this one (the tiers share the workload mix)."""
+        waiting = ctx.snapshot.get("queue_depth", 0) + 1
+        return waiting * ctx.req.max_new_tokens * self.sec_per_token
+
+    def decide(self, ctx) -> Optional[str]:
+        if ctx.req.deadline_s is None:
+            return None
+        if self.estimate_local_s(ctx) * self.safety > ctx.req.deadline_s:
+            return "deadline_risk"
+        return None
+
+
+class LocalOverloadEscalation:
+    """Escalate on local pressure: the endpoint's admission queue is
+    deeper than ``max_queue_depth``, or (paged KV) the pool high-water
+    mark has climbed past ``kv_frac`` of capacity — the request would
+    only deepen a backlog the small tier cannot drain."""
+
+    name = "overload"
+
+    def __init__(self, max_queue_depth: int = 2, kv_frac: float = 1.0):
+        self.max_queue_depth = max_queue_depth
+        self.kv_frac = kv_frac
+
+    def decide(self, ctx) -> Optional[str]:
+        if ctx.snapshot.get("queue_depth", 0) > self.max_queue_depth:
+            return "local_overload"
+        kv = ctx.snapshot.get("kv", {})
+        pool = kv.get("paged_kv_pool_bytes", 0.0)
+        if pool and kv.get("paged_kv_hwm_bytes", 0.0) >= self.kv_frac * pool:
+            return "local_overload"
+        return None
+
+
+# ---------------------------------------------------------------------------
 # factories (EngineConfig carries policy names or instances)
 # ---------------------------------------------------------------------------
 
@@ -235,6 +343,14 @@ PREEMPTION_POLICIES = {
 PLACEMENT_POLICIES = {
     "round-robin": RoundRobinPlacement,
     "least-loaded": LeastLoadedPlacement,
+}
+
+ESCALATION_POLICIES = {
+    "never": NeverEscalate,
+    "always": AlwaysEscalate,
+    "confidence": ConfidenceEscalation,
+    "deadline-risk": DeadlineRiskEscalation,
+    "overload": LocalOverloadEscalation,
 }
 
 
@@ -272,3 +388,23 @@ def make_placement(spec) -> Any:
                 f"placement policy {spec!r} not in "
                 f"{sorted(PLACEMENT_POLICIES)}") from None
     return spec
+
+
+def make_escalation(spec) -> List[Any]:
+    """Resolve an escalation policy specification into a policy *list*
+    (the TieredEngine ORs them): a name, an instance, or a sequence of
+    either."""
+    if isinstance(spec, str) or not isinstance(spec, (list, tuple)):
+        spec = [spec]
+    out = []
+    for s in spec:
+        if isinstance(s, str):
+            try:
+                out.append(ESCALATION_POLICIES[s]())
+            except KeyError:
+                raise ValueError(
+                    f"escalation policy {s!r} not in "
+                    f"{sorted(ESCALATION_POLICIES)}") from None
+        else:
+            out.append(s)
+    return out

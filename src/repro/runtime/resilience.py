@@ -220,19 +220,50 @@ class FailureInjector:
     timestamps have elapsed since the previous call — the injection side
     of the companion paper's experiments, where a device is powered off at
     a chosen instant mid-inference.
+
+    Beyond the raw event feed, the injector folds delivered kill/revive
+    events into *current* up/down state — ``unit_up`` / ``link_up`` /
+    ``dead_units`` / ``dead_links`` answer "as of the last advance()".
+    The escalation layer (``runtime.escalation``) polls ``link_up`` for
+    its endpoint↔server link each pump round; a down→up transition there
+    is what triggers journal fail-back.
     """
 
     def __init__(self, trace: FailureTrace):
         self.trace = trace
         self._cursor = 0
+        self._dead_units: set = set()
+        self._dead_links: set = set()
 
     def advance(self, now: float) -> List[FailureEvent]:
         fresh: List[FailureEvent] = []
         while (self._cursor < len(self.trace.events)
                and self.trace.events[self._cursor].t_s <= now):
-            fresh.append(self.trace.events[self._cursor])
+            e = self.trace.events[self._cursor]
+            fresh.append(e)
+            dead = self._dead_units if e.kind == UNIT else self._dead_links
+            if e.action == KILL:
+                dead.add(e.target)
+            else:
+                dead.discard(e.target)
             self._cursor += 1
         return fresh
+
+    # -- current state (as of the last advance) -----------------------------
+
+    def unit_up(self, unit: str) -> bool:
+        return unit not in self._dead_units
+
+    def link_up(self, a: str, b: str) -> bool:
+        return _link_key(a, b) not in self._dead_links
+
+    @property
+    def dead_units(self) -> List[str]:
+        return sorted(self._dead_units)
+
+    @property
+    def dead_links(self) -> List[FrozenSet[str]]:
+        return sorted(self._dead_links, key=sorted)
 
     @property
     def exhausted(self) -> bool:

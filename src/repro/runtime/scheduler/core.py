@@ -358,6 +358,8 @@ class ContinuousScheduler:
             done.extend(self._decode_step(t0))
         if self.sched.debug:
             self._check_invariants()
+        if self.sched.step_delay_s:
+            time.sleep(self.sched.step_delay_s)   # device-speed handicap
         return self._deliver(done, on_completion)
 
     # -- observability hooks (self.obs is not None on every call) -----------

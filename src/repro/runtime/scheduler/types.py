@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 
-FINISH_REASONS = ("eos", "length", "cancelled", "failed", "timeout")
+FINISH_REASONS = ("eos", "length", "cancelled", "failed", "timeout",
+                  "local_fallback")
 
 # stats() key schema — the typed-empty snapshot for policies with no
 # continuous scheduler (Engine.stats on batch admission) must agree
@@ -52,7 +53,9 @@ class Completion:
     first_token_s: float = 0.0
     finish_s: float = 0.0
     # why the request stopped:
-    # "eos" | "length" | "cancelled" | "failed" | "timeout"
+    # "eos" | "length" | "cancelled" | "failed" | "timeout" |
+    # "local_fallback" (a TieredEngine answered locally because the
+    # escalation link was down and the deadline could not wait)
     finish_reason: str = "length"
     # times the request was re-queued (slot failure or pool preemption)
     restarts: int = 0
@@ -149,6 +152,12 @@ class SchedulerConfig:
     # unit topologies, so costs must not depend on wall-clock noise)
     prefill_sec_per_token: float = 1e-4
     decode_sec_per_token: float = 1e-4
+    # wall-clock device-speed handicap: sleep this long after every
+    # non-idle step. Emulates serving on a slower device (an edge
+    # endpoint tier vs a server tier sharing one host, as in the
+    # hierarchical-serving bench) — token content is untouched, only
+    # real elapsed time stretches.
+    step_delay_s: float = 0.0
     # assert slot/block accounting invariants at every step boundary
     debug: bool = False
 

@@ -29,6 +29,15 @@ surface built in ``runtime.engine``:
 * ``GET /trace`` — the engine's Chrome trace-event JSON so far (loads
   in Perfetto / ``chrome://tracing``; empty-but-valid with
   observability off).
+* ``POST /escalate`` — the tier-to-tier ingress: same request schema as
+  ``/generate`` (plus optional ``seq``/``source`` echoed back) but
+  always non-streaming, counted separately
+  (``repro_escalations_received_total``). A ``runtime.escalation``
+  ``HttpTransport`` on an endpoint posts its journal replays here; the
+  response carries this server's ``tier`` so the endpoint can label
+  per-tier latency. ``/status`` reports ``tier`` — from ``ServerConfig``
+  for a plain engine, or the fronted ``TieredEngine``'s own identity —
+  so topology is discoverable.
 
 Backpressure: admission is bounded. At most ``max_inflight`` requests
 may be open (queued + decoding) at once; a ``/generate`` beyond that is
@@ -82,6 +91,10 @@ class ServerConfig:
     # an unbounded decode); 0 disables the cap
     max_new_cap: int = 0
     warmup: bool = True         # run a compile request before reporting ready
+    # this server's tier identity in a hierarchical (endpoint <-> server)
+    # topology: reported in /status and echoed by /escalate. A fronted
+    # TieredEngine's own tier takes precedence.
+    tier: str = "server"
 
 
 class _BadRequest(ValueError):
@@ -111,6 +124,10 @@ class EngineServer:
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._http_thread: Optional[threading.Thread] = None
         self.port = self.config.port
+        self._escalations = engine.obs.registry.counter(
+            "repro_escalations_received_total",
+            help="requests ingested through /escalate (tier-to-tier "
+                 "traffic, vs. client traffic on /generate)")
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -212,7 +229,10 @@ class EngineServer:
     def status(self) -> Dict[str, Any]:
         st = self.engine.snapshot()     # engine state under the engine lock
         st.update(ready=self.ready.is_set(), inflight=self._inflight,
-                  max_inflight=self.config.max_inflight)
+                  max_inflight=self.config.max_inflight,
+                  escalations_received=int(self._escalations.value))
+        # a TieredEngine snapshot already carries its own tier identity
+        st.setdefault("tier", self.config.tier)
         return st
 
     def metrics_text(self) -> str:
@@ -282,9 +302,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._json(404, {"error": f"no route {self.path!r}"})
 
     def do_POST(self) -> None:
-        if self.path != "/generate":
+        if self.path not in ("/generate", "/escalate"):
             self._json(404, {"error": f"no route {self.path!r}"})
             return
+        escalate = self.path == "/escalate"
         try:
             n = int(self.headers.get("Content-Length", 0))
             body = json.loads(self.rfile.read(n) or b"{}")
@@ -302,12 +323,22 @@ class _Handler(BaseHTTPRequestHandler):
             self._json(429, {"error": str(e)},
                        {"Retry-After": str(self.srv.config.retry_after_s)})
             return
+        if escalate:
+            self.srv._escalations.inc()
         try:
-            if body.get("stream"):
+            if body.get("stream") and not escalate:
                 self._stream(handle)
             else:
                 c = handle.result()
-                self._json(200, _completion_json(c))
+                out = _completion_json(c)
+                if escalate:
+                    # echo routing metadata so the endpoint's replayer
+                    # can correlate and label the answering tier
+                    out["tier"] = getattr(self.srv.engine, "tier",
+                                          self.srv.config.tier)
+                    if body.get("seq") is not None:
+                        out["seq"] = body["seq"]
+                self._json(200, out)
         except (BrokenPipeError, ConnectionResetError):
             handle.cancel()     # client went away: free the slot
         finally:

@@ -12,6 +12,10 @@ closed set of ``finish_reason`` values:
     for tok in handle.stream():
         ...
 
+Hierarchical serving (``runtime.escalation``) is re-exported here too:
+``TieredEngine`` fronts a local ``Engine`` plus a remote tier behind a
+transport, with a durable on-disk escalation journal.
+
 Deep imports (``repro.runtime.engine``, ``repro.runtime.scheduler``)
 keep working — this package only re-exports — but docs and examples use
 this path so internal module reshuffles never break callers. The legacy
@@ -19,6 +23,10 @@ this path so internal module reshuffles never break callers. The legacy
 with a ``DeprecationWarning``.
 """
 from repro.runtime.engine import Engine, EngineConfig, RequestHandle
+from repro.runtime.escalation import (EscalationJournal, FlakyTransport,
+                                      HttpTransport, InProcessTransport,
+                                      JournalReplayer, LinkDown, TieredConfig,
+                                      TieredEngine, TieredHandle)
 from repro.runtime.observability import (MetricsRegistry, Observability,
                                          Tracer, parse_prometheus,
                                          validate_chrome_trace)
@@ -36,6 +44,15 @@ __all__ = [
     "FINISH_REASONS",
     "EngineServer",
     "ServerConfig",
+    "TieredEngine",
+    "TieredConfig",
+    "TieredHandle",
+    "EscalationJournal",
+    "JournalReplayer",
+    "InProcessTransport",
+    "HttpTransport",
+    "FlakyTransport",
+    "LinkDown",
     "Observability",
     "MetricsRegistry",
     "Tracer",

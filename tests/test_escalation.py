@@ -1,0 +1,381 @@
+"""Hierarchical serving (`runtime.escalation`): tiered engines, the
+durable escalation queue, degraded modes, and the HTTP integration.
+
+* escalation policies: decide() contracts on fabricated contexts (no
+  models involved);
+* journal basics: monotone seqs across restarts, bounded capacity,
+  idempotent ack (the arbitrary-interleaving half lives in
+  ``test_escalation_props.py``);
+* token identity: a TieredEngine that never escalates produces greedy
+  tokens bit-identical to the plain local engine, and — with the same
+  params on both tiers — escalated completions match too (escalation
+  moves requests, never content);
+* degraded modes: link down + tight deadline => local answer with
+  ``finish_reason="local_fallback"``; link down + expired deadline =>
+  ``"timeout"`` shed; both reasons are members of ``FINISH_REASONS``;
+* fail-back: a link cut strands a deadline-free request in the journal
+  (durable wait), revival replays it to the server tier exactly once
+  and bumps ``repro_failback_total``;
+* HTTP: ``EngineServer`` fronting a TieredEngine serves ``/generate``
+  transparently and reports tier identity + escalation state in
+  ``/status`` and the escalation counters in ``/metrics``; a plain
+  server's ``/escalate`` ingress answers an ``HttpTransport`` send.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.escalation import (EscalationContext, EscalationJournal,
+                                      FlakyTransport, HttpTransport,
+                                      InProcessTransport, JournalFull,
+                                      TieredConfig, TieredEngine)
+from repro.runtime.policies import (AlwaysEscalate, ConfidenceEscalation,
+                                    DeadlineRiskEscalation,
+                                    LocalOverloadEscalation, NeverEscalate,
+                                    make_escalation)
+from repro.runtime.resilience import FailureTrace
+from repro.serving import (FINISH_REASONS, Engine, EngineConfig, EngineServer,
+                           Request, ServerConfig, parse_prometheus)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+        param_dtype="float32", attn_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(cfg, KEY)
+
+
+def _prompts(n, length=6, vocab=64, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _local(cfg, params, **kw):
+    kw.setdefault("max_slots", 1)
+    kw.setdefault("max_len", 64)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+class _Ctx:
+    """Fabricated EscalationContext stand-in (duck-typed)."""
+
+    def __init__(self, req=None, snapshot=None, conf=1.0, now_s=0.0):
+        self.req = req or Request(id=0, prompt=np.zeros(4, np.int32),
+                                  max_new_tokens=8)
+        self.snapshot = snapshot or {"queue_depth": 0, "kv": {}}
+        self.now_s = now_s
+        self._conf = conf
+
+    def confidence(self):
+        return self._conf
+
+
+def test_policy_decisions():
+    assert NeverEscalate().decide(_Ctx()) is None
+    assert AlwaysEscalate().decide(_Ctx()) == "always"
+    conf = ConfidenceEscalation(threshold=0.5)
+    assert conf.decide(_Ctx(conf=0.9)) is None
+    assert conf.decide(_Ctx(conf=0.1)) == "low_confidence"
+    risk = DeadlineRiskEscalation(sec_per_token=0.01, safety=1.0)
+    slow = _Ctx(req=Request(id=1, prompt=np.zeros(4, np.int32),
+                            max_new_tokens=100, deadline_s=0.5),
+                snapshot={"queue_depth": 3, "kv": {}})
+    assert risk.decide(slow) == "deadline_risk"          # 4*100*0.01 > 0.5
+    assert risk.decide(_Ctx()) is None                   # no deadline
+    over = LocalOverloadEscalation(max_queue_depth=2)
+    assert over.decide(_Ctx(snapshot={"queue_depth": 5, "kv": {}})) \
+        == "local_overload"
+    assert over.decide(_Ctx()) is None
+
+
+def test_make_escalation_specs():
+    assert [p.name for p in make_escalation("confidence")] == ["confidence"]
+    assert [p.name for p in make_escalation(("confidence", "overload"))] \
+        == ["confidence", "overload"]
+    inst = ConfidenceEscalation(threshold=0.9)
+    assert make_escalation(inst) == [inst]
+    with pytest.raises(ValueError):
+        make_escalation("no-such-policy")
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_capacity(tmp_path):
+    j = EscalationJournal(str(tmp_path), capacity=2)
+    r = Request(id=5, prompt=np.arange(4, dtype=np.int32), max_new_tokens=3,
+                eos=7, priority=2, deadline_s=1.5)
+    s0 = j.append(r, arrival_s=0.25)
+    s1 = j.append(Request(id=6, prompt=np.ones(2, np.int32)))
+    with pytest.raises(JournalFull):
+        j.append(Request(id=7, prompt=np.ones(2, np.int32)))
+    assert j.depth == 2 and s1 == s0 + 1
+
+    entries = j.pending()
+    assert [e.seq for e in entries] == [s0, s1]
+    back = entries[0].req
+    assert back.id == 5 and back.eos == 7 and back.priority == 2
+    assert back.deadline_s == 1.5 and back.max_new_tokens == 3
+    np.testing.assert_array_equal(back.prompt, r.prompt)
+    assert entries[0].meta["arrival_s"] == 0.25
+
+    j.ack(s0)
+    j.ack(s0)                           # idempotent
+    assert [e.seq for e in j.pending()] == [s1]
+    # restart: pending survives, seq counter never reuses
+    j2 = EscalationJournal(str(tmp_path), capacity=2)
+    assert [e.seq for e in j2.pending()] == [s1]
+    assert j2.append(Request(id=8, prompt=np.ones(2, np.int32))) == s1 + 1
+
+
+# ---------------------------------------------------------------------------
+# tiered engine: identity + escalation paths
+# ---------------------------------------------------------------------------
+
+
+def test_never_escalate_tokens_bit_identical(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(3)
+    with _local(cfg, params) as plain:
+        plain.start()
+        want = [plain.submit(Request(id=i, prompt=p, max_new_tokens=6))
+                .result(60).tokens for i, p in enumerate(prompts)]
+
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params), InProcessTransport(server.start()),
+        TieredConfig(policies=("never",), journal_dir=str(tmp_path)))
+    with tiered, server:
+        tiered.start()
+        handles = [tiered.submit(Request(id=i, prompt=p, max_new_tokens=6))
+                   for i, p in enumerate(prompts)]
+        got = [h.result(60).tokens for h in handles]
+        assert all(not h.escalated and h.tier == "endpoint" for h in handles)
+    assert got == want
+    assert tiered.escalation_stats()["escalated"] == 0
+
+
+def test_always_escalate_matches_and_counts(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(3, seed=11)
+    with _local(cfg, params) as plain:
+        plain.start()
+        want = [plain.submit(Request(id=i, prompt=p, max_new_tokens=6))
+                .result(60).tokens for i, p in enumerate(prompts)]
+
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params), InProcessTransport(server.start()),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path)))
+    with tiered, server:
+        tiered.start()
+        handles = [tiered.submit(Request(id=i, prompt=p, max_new_tokens=6))
+                   for i, p in enumerate(prompts)]
+        results = [h.result(60) for h in handles]
+        # same params on both tiers: escalation moved the requests, not
+        # the content
+        assert [c.tokens for c in results] == want
+        assert all(h.escalated and h.tier == "server" for h in handles)
+        assert all(h.reason == "always" for h in handles)
+        stats = tiered.escalation_stats()
+        assert stats["escalated"] == 3 and stats["queue_depth"] == 0
+
+
+def test_stream_surface_on_both_paths(setup, tmp_path):
+    cfg, params = setup
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params), InProcessTransport(server.start()),
+        TieredConfig(policies=("never",), journal_dir=str(tmp_path / "a")))
+    with tiered, server:
+        tiered.start()
+        h = tiered.submit(Request(id=0, prompt=_prompts(1)[0],
+                                  max_new_tokens=5))
+        toks = list(h.stream())
+        assert h.completion is not None and toks == list(h.completion.tokens)
+
+    server2 = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered2 = TieredEngine(
+        _local(cfg, params), InProcessTransport(server2.start()),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path / "b")))
+    with tiered2, server2:
+        tiered2.start()
+        h = tiered2.submit(Request(id=0, prompt=_prompts(1)[0],
+                                   max_new_tokens=5))
+        toks = list(h.stream())
+        assert h.escalated and toks == list(h.completion.tokens)
+
+
+# ---------------------------------------------------------------------------
+# degraded modes: link down
+# ---------------------------------------------------------------------------
+
+
+def _dead_link_transport(server, *, revive_at=None):
+    trace = FailureTrace().kill_link("endpoint", "server", at=0.0)
+    if revive_at is not None:
+        trace.revive_link("endpoint", "server", at=revive_at)
+    return FlakyTransport(InProcessTransport(server), trace)
+
+
+def test_local_fallback_when_link_down_and_deadline_tight(setup, tmp_path):
+    cfg, params = setup
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params), _dead_link_transport(server.start()),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path),
+                     fallback_slack_s=10.0))     # any deadline => fallback now
+    with tiered, server:
+        tiered.start()
+        h = tiered.submit(Request(id=0, prompt=_prompts(1)[0],
+                                  max_new_tokens=5, deadline_s=5.0))
+        c = h.result(60)
+    assert c.finish_reason == "local_fallback"
+    assert c.finish_reason in FINISH_REASONS
+    assert len(c.tokens) == 5                    # answered, on-device
+    assert h.escalated and h.tier == "endpoint"  # decided up, served down
+    stats = tiered.escalation_stats()
+    assert stats["local_fallback"] == 1 and stats["escalated"] == 0
+    assert stats["queue_depth"] == 0             # fallback acked the entry
+
+
+def test_timeout_shed_when_link_down_and_deadline_expired(setup, tmp_path):
+    cfg, params = setup
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params), _dead_link_transport(server.start()),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path),
+                     fallback_slack_s=0.0))      # no fallback window: shed
+    with tiered, server:
+        tiered.start()
+        h = tiered.submit(Request(id=0, prompt=_prompts(1)[0],
+                                  max_new_tokens=5, deadline_s=0.05))
+        c = h.result(60)
+    assert c.finish_reason == "timeout" and c.finish_reason in FINISH_REASONS
+    assert c.tokens == []                        # shed, never decoded
+    assert tiered.escalation_stats()["sheds"] == 1
+
+
+def test_link_cut_then_failback_replays_durably(setup, tmp_path):
+    cfg, params = setup
+    server = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params),
+        _dead_link_transport(server.start(), revive_at=1.0),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path)))
+    with tiered, server:
+        tiered.start()
+        # deadline-free: waits durably in the journal through the cut
+        hs = [tiered.submit(Request(id=i, prompt=p, max_new_tokens=4))
+              for i, p in enumerate(_prompts(2, seed=3))]
+        assert tiered.journal.depth == 2         # stranded behind the cut
+        results = [h.result(60) for h in hs]     # ...until revival
+        assert [c.finish_reason for c in results] == ["length", "length"]
+        assert all(h.tier == "server" for h in hs)
+        stats = tiered.escalation_stats()
+        assert stats["failback"] >= 1 and stats["escalated"] == 2
+        assert stats["queue_depth"] == 0 and stats["link_up"]
+
+
+# ---------------------------------------------------------------------------
+# HTTP integration
+# ---------------------------------------------------------------------------
+
+
+def _http(srv, method, path, body=None):
+    import http.client
+    conn = http.client.HTTPConnection(srv.config.host, srv.port, timeout=120)
+    try:
+        conn.request(method, path,
+                     json.dumps(body) if body is not None else None,
+                     {"Content-Type": "application/json"})
+        r = conn.getresponse()
+        return r.status, r.read()
+    finally:
+        conn.close()
+
+
+def test_server_fronting_tiered_engine(setup, tmp_path):
+    cfg, params = setup
+    remote = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    tiered = TieredEngine(
+        _local(cfg, params, observability=True),
+        InProcessTransport(remote.start()),
+        TieredConfig(policies=("always",), journal_dir=str(tmp_path)))
+    with remote, \
+            EngineServer(tiered, ServerConfig(port=0, max_inflight=4)) as srv:
+        status, raw = _http(srv, "POST", "/generate",
+                            {"prompt": [1, 2, 3], "max_new_tokens": 4})
+        assert status == 200
+        out = json.loads(raw)
+        assert len(out["tokens"]) == 4
+        assert out["finish_reason"] in FINISH_REASONS
+
+        status, raw = _http(srv, "GET", "/status")
+        st = json.loads(raw)
+        assert st["tier"] == "endpoint"
+        esc = st["escalation"]
+        # warmup goes through the policy gate too, so >= the one client
+        # request; everything that finished left the journal
+        assert esc["escalated"] >= 1 and esc["queue_depth"] == 0
+
+        status, raw = _http(srv, "GET", "/metrics")
+        m = parse_prometheus(raw.decode())
+        for name in ("repro_escalated_total", "repro_local_fallback_total",
+                     "repro_failback_total"):
+            assert name in m["counters"], name
+        assert "repro_escalation_queue_depth" in m["gauges"]
+        assert m["counters"]["repro_escalated_total"] == esc["escalated"]
+        assert m["histograms"]["repro_tier_server_ttft_seconds"]["count"] \
+            >= 1
+
+
+def test_escalate_route_and_http_transport(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    with EngineServer(eng, ServerConfig(port=0, tier="edge-server")) as srv:
+        # raw route: metadata echo + tier identity
+        status, raw = _http(srv, "POST", "/escalate",
+                            {"prompt": [1, 2, 3], "max_new_tokens": 4,
+                             "seq": 17, "source": "endpoint"})
+        assert status == 200
+        out = json.loads(raw)
+        assert out["seq"] == 17 and out["tier"] == "edge-server"
+        assert len(out["tokens"]) == 4
+
+        # the ingress is counted separately from client traffic
+        _, raw = _http(srv, "GET", "/status")
+        st = json.loads(raw)
+        assert st["tier"] == "edge-server"
+        assert st["escalations_received"] == 1
+
+        # HttpTransport: the client half of the same wire
+        tr = HttpTransport(srv.url, tier="edge-server")
+        assert tr.healthy()
+        c = tr.send(Request(id=9, prompt=np.array([1, 2, 3], np.int32),
+                            max_new_tokens=4), seq=18)
+        assert len(c.tokens) == 4 and c.finish_reason in FINISH_REASONS
+        _, raw = _http(srv, "GET", "/status")
+        assert json.loads(raw)["escalations_received"] == 2
