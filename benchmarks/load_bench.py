@@ -32,7 +32,11 @@ perf trajectory is recorded in-repo and regression-gated: ``--baseline``
 compares TTFT p99 against a committed run and exits non-zero past
 ``--max-regression``, and — when both runs carry a ``rate_sweep`` — the
 saturation-knee *rate* against ``--max-knee-regression`` (the capacity
-gate next to the latency gate; both run in CI nightly).
+gate next to the latency gate; both run in CI nightly). ``--tenants N``
+adds the prefix-cache service section: a two-wave multi-tenant
+shared-prefix trace whose cross-request hit-rate and replay bytes-saved
+land under ``prefix_cache`` and are gated by
+``--max-prefix-regression`` when both runs carry the section.
 
 By default the bench self-hosts an ``EngineServer`` on a tiny model and
 an ephemeral port (so it runs anywhere, CI included); ``--url`` points
@@ -139,6 +143,63 @@ def _worker(host: str, port: int, jobs: List[tuple], t0: float,
         res = _Result(rid)
         _run_one(host, port, body, res)
         results.append(res)
+
+
+def _prefix_cache_trace(host: str, port: int, *, tenants: int,
+                        max_new: int, vocab: int,
+                        seed: int) -> Dict[str, Any]:
+    """Prefix-cache service section: a two-wave multi-tenant
+    shared-prefix HTTP trace. Wave 1 warms the pool and drains; wave 2
+    replays the same per-tenant prompts as cold admissions, so its
+    ``victim_hits`` delta (scraped from /status) is exactly the
+    cross-request hit count. Returns {} when the server runs without
+    the prefix cache."""
+    rng = np.random.RandomState(seed)
+    names = [f"tenant{t}" for t in range(max(tenants, 1))]
+    bodies = []
+    for t in names:
+        pre = [int(x) for x in rng.randint(1, vocab, 24)]
+        for i in range(2):
+            tail = [int(x) for x in rng.randint(1, vocab, 6 + 4 * i)]
+            bodies.append({"prompt": pre + tail, "max_new_tokens": max_new,
+                           "stream": True, "tenant": t})
+
+    def scrape() -> Dict[str, Any]:
+        status, raw = _http_get(host, port, "/status")
+        if status != 200:
+            return {}
+        return json.loads(raw).get("prefix_cache") or {}
+
+    prev = scrape()
+    if not prev.get("enabled"):
+        return {}
+    waves = []
+    for wave in range(2):
+        for i, body in enumerate(bodies):
+            res = _Result(f"pc-{wave}-{i}")
+            _run_one(host, port, dict(body), res)
+            if res.status != 200 or res.error:
+                raise RuntimeError(
+                    f"prefix-cache trace request failed: status="
+                    f"{res.status} error={res.error}")
+        cur = scrape()
+        waves.append({k: cur.get(k, 0) - prev.get(k, 0)
+                      for k in ("victim_hits", "prefix_hits",
+                                "prefill_tokens_saved", "bytes_saved")})
+        waves[-1]["requests"] = len(bodies)
+        prev = cur
+    replay = waves[1]
+    return {
+        "tenants": len(names),
+        "victim_cache": bool(prev.get("victim_cache")),
+        "waves": waves,
+        "cross_request_hit_rate":
+            replay["victim_hits"] / max(replay["requests"], 1),
+        "replay_bytes_saved": replay["bytes_saved"],
+        "per_tenant_bytes": prev.get("per_tenant_bytes", {}),
+        "pool": {k: prev.get(k, 0) for k in
+                 ("victim_blocks", "victim_bytes", "victim_evictions")},
+    }
 
 
 def _http_get(host: str, port: int, path: str) -> tuple:
@@ -332,6 +393,13 @@ def main(argv=None) -> int:
                          "per-rate (rate, TTFT p99, throughput) points "
                          "plus the saturation knee under 'rate_sweep' "
                          "in the result JSON")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="run the prefix-cache service section: a "
+                         "two-wave multi-tenant shared-prefix trace "
+                         "whose cross-request hit-rate and bytes-saved "
+                         "land under 'prefix_cache' in the result JSON "
+                         "(needs a server with --prefix-cache; pair "
+                         "with --victim-cache for cross-drain hits)")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="write the result JSON here")
@@ -350,6 +418,11 @@ def main(argv=None) -> int:
                          "saturation-knee rate drops below the baseline "
                          "knee by more than this fraction (the capacity "
                          "gate next to the latency gate)")
+    ap.add_argument("--max-prefix-regression", type=float, default=0.25,
+                    help="with --baseline and --tenants: fail if the "
+                         "prefix-cache cross-request hit-rate or replay "
+                         "bytes-saved drop below the baseline by more "
+                         "than this fraction")
     args = ap.parse_args(argv)
 
     n = args.requests or (24 if args.tiny else 200)
@@ -423,6 +496,20 @@ def main(argv=None) -> int:
             print(f"sweep knee: {k['rate_per_s']:g}/s "
                   f"(ttft p99 {k['ttft_p99_s'] * 1e3:.1f} ms, "
                   f"{k['throughput_tok_per_s']:.0f} tok/s)")
+        if args.tenants:
+            pc = _prefix_cache_trace(host, port, tenants=args.tenants,
+                                     max_new=max_new, vocab=256,
+                                     seed=args.seed + 1)
+            if pc:
+                out["prefix_cache"] = pc
+                print(f"prefix cache: {pc['tenants']} tenants, "
+                      f"cross-request hit-rate "
+                      f"{pc['cross_request_hit_rate']:.2f}, replay saved "
+                      f"{pc['replay_bytes_saved']} B "
+                      f"(victim={'on' if pc['victim_cache'] else 'off'})")
+            else:
+                print("prefix cache: server runs without the prefix "
+                      "cache; section skipped", file=sys.stderr)
     finally:
         if srv is not None:
             srv.close()
@@ -471,6 +558,27 @@ def main(argv=None) -> int:
         elif base_knee and not cur_knee:
             print("FAIL: baseline has a rate_sweep knee but this run "
                   "was not driven with --sweep", file=sys.stderr)
+            rc = 1
+        # cache-effectiveness gate: the prefix-cache service's
+        # cross-request hit-rate and replay bytes-saved must not slide
+        # down vs. the committed run
+        base_pc = base.get("prefix_cache")
+        cur_pc = out.get("prefix_cache")
+        if base_pc and cur_pc:
+            for key in ("cross_request_hit_rate", "replay_bytes_saved"):
+                floor = base_pc[key] * (1.0 - args.max_prefix_regression)
+                print(f"prefix {key}: {cur_pc[key]:g} vs baseline "
+                      f"{base_pc[key]:g} (floor {floor:g})")
+                if cur_pc[key] < floor:
+                    print(f"FAIL: prefix-cache {key} regressed past "
+                          f"{args.max_prefix_regression:.0%} "
+                          f"({cur_pc[key]:g} < {floor:g})",
+                          file=sys.stderr)
+                    rc = 1
+        elif base_pc and not cur_pc:
+            print("FAIL: baseline has a prefix_cache section but this "
+                  "run was not driven with --tenants against a "
+                  "prefix-cache server", file=sys.stderr)
             rc = 1
     return rc
 

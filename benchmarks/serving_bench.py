@@ -259,6 +259,77 @@ def _prefix_rows(cfg, params, *, max_len: int, slots: int, n: int,
     ]
 
 
+def _victim_rows(cfg, params, *, max_len: int, slots: int, n: int,
+                 max_new: int, tenants: int) -> List[Row]:
+    """The prefix-cache *service* section: a two-wave multi-tenant
+    shared-prefix trace, victim cache on vs off. Wave 1 drains fully
+    (every chain hits refcount 0); wave 2 re-sends the same per-tenant
+    prompts as cold admissions. With the victim cache on those must
+    resume from parked chains (``victim_hits`` counts exactly the
+    cross-request hits — it is structurally zero with the cache off),
+    and retention must never change the greedy tokens."""
+    tenants = max(tenants, 1)
+    prefix_len = 32
+    rng = np.random.RandomState(5)
+    names = [f"tenant{t}" for t in range(tenants)]
+    preamble = {t: rng.randint(0, cfg.vocab_size, prefix_len)
+                .astype(np.int32) for t in names}
+    per = max(n // tenants, 2)
+    prompts = [(t, np.concatenate(
+        [preamble[t], rng.randint(0, cfg.vocab_size,
+                                  8 + 4 * (i % 3)).astype(np.int32)]))
+        for t in names for i in range(per)]
+
+    def wave_reqs(base: int) -> List[Request]:
+        return [Request(base + i, p.copy(), max_new_tokens=max_new,
+                        tenant=t) for i, (t, p) in enumerate(prompts)]
+
+    runs = {}
+    for on in (False, True):
+        eng = Engine(cfg, params, EngineConfig(
+            max_len=max_len, max_slots=slots, kv_layout="paged",
+            block_size=16, prefix_cache=True, victim_cache=on))
+        w1 = eng.generate(wave_reqs(0))         # also the compile warmup
+        base = eng.stats()
+        w2 = eng.generate(wave_reqs(10_000))    # cold cross-drain replay
+        st = eng.stats()
+        runs[on] = {
+            "w1": w1, "w2": w2,
+            "victim_hits": st["victim_hits"] - base["victim_hits"],
+            "saved": st["prefill_tokens_saved"]
+            - base["prefill_tokens_saved"],
+            "total": st["prefill_tokens_total"]
+            - base["prefill_tokens_total"],
+            "snap": eng.snapshot().get("prefix_cache", {}),
+        }
+    for w in ("w1", "w2"):
+        assert [c.tokens for c in runs[True][w]] == \
+            [c.tokens for c in runs[False][w]], \
+            f"victim cache changed greedy tokens (wave {w})"
+    assert runs[False]["victim_hits"] == 0, \
+        "victim_hits must be structurally zero with the cache off"
+    assert runs[True]["victim_hits"] > 0, \
+        "cold replay never resumed from a parked chain"
+    snap = runs[True]["snap"]
+    assert len(snap.get("per_tenant_bytes", {})) == tenants, \
+        "victim pool is missing a tenant's namespace"
+    hit_rate = runs[True]["victim_hits"] / len(prompts)
+    saved_frac = runs[True]["saved"] / max(runs[True]["total"], 1)
+    return [
+        Row("serving", "victim_tenants", float(tenants), "n"),
+        Row("serving", "victim_cross_request_hit_rate", hit_rate, "x"),
+        Row("serving", "victim_hits", float(runs[True]["victim_hits"]),
+            "req"),
+        Row("serving", "victim_prefill_tokens_saved_frac", saved_frac, "x"),
+        Row("serving", "victim_bytes_saved",
+            float(runs[True]["saved"] * T.kv_row_bytes(cfg)), "B"),
+        Row("serving", "victim_pool_blocks",
+            float(snap.get("victim_blocks", 0)), "blk"),
+        Row("serving", "victim_evictions",
+            float(snap.get("victim_evictions", 0)), "n"),
+    ]
+
+
 def _disagg_rows(cfg, params, *, tiny: bool) -> List[Row]:
     """Prefill/decode disaggregation on the multi-unit execution core:
     one closed-loop trace through three unit topologies — single unit
@@ -351,8 +422,8 @@ def _observability_rows(cfg, params, reqs, arrivals, *, max_len: int,
 def run(*, tiny: bool = False, n_requests: Optional[int] = None,
         max_new: Optional[int] = None, rate: float = 200.0,
         seed: int = 1, paged: bool = False, watermark: int = 0,
-        prefix_cache: bool = False,
-        trace_out: Optional[str] = None) -> List[Row]:
+        prefix_cache: bool = False, victim_cache: bool = False,
+        tenants: int = 0, trace_out: Optional[str] = None) -> List[Row]:
     cfg = _cfg(tiny)
     n = n_requests or (8 if tiny else 16)
     new = max_new or (8 if tiny else 32)
@@ -403,6 +474,9 @@ def run(*, tiny: bool = False, n_requests: Optional[int] = None,
     if prefix_cache:
         rows += _prefix_rows(cfg, params, max_len=max_len, slots=slots,
                              n=n, max_new=new, rate=rate, seed=seed)
+    if victim_cache:
+        rows += _victim_rows(cfg, params, max_len=max_len, slots=slots,
+                             n=n, max_new=new, tenants=tenants or 4)
     rows += _disagg_rows(cfg, params, tiny=tiny)
 
     # continuous+pipelined: prefill stream through a 2-unit StagedProgram
@@ -462,6 +536,9 @@ def main() -> None:
                          "open-loop workload")
     ap.add_argument("--seed", type=int, default=1,
                     help="arrival-process RNG seed (reproducible sweeps)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="tenant count for the victim-cache section "
+                         "(with --victim-cache; 0 = default of 4)")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON to this path")
     ap.add_argument("--trace-out", default=None,
@@ -471,7 +548,9 @@ def main() -> None:
     rows = run(tiny=args.tiny, n_requests=args.requests,
                max_new=args.max_new, rate=args.rate, seed=args.seed,
                paged=args.paged, watermark=args.watermark,
-               prefix_cache=args.prefix_cache, trace_out=args.trace_out)
+               prefix_cache=args.prefix_cache,
+               victim_cache=getattr(args, "victim_cache", False),
+               tenants=args.tenants, trace_out=args.trace_out)
     print(HEADER)
     emit(rows, out_path=args.out)
 

@@ -100,6 +100,16 @@ class EngineConfig:
     # resident block chains and maps shared blocks into the request's
     # table copy-on-write, skipping prefill for the matched region
     prefix_cache: bool = False
+    # victim cache (requires prefix_cache): released refcount-1 prefix
+    # blocks park in a reclaimable pool (K/V resident, index alive), so
+    # cold admissions hit completed requests' chains across drain
+    # epochs; evicted (victim_eviction order) under allocation pressure.
+    victim_cache: bool = False
+    victim_eviction: Any = "weighted-lru"   # | "lru" (policies registry)
+    # per-tenant victim-pool byte budgets ({Request.tenant: bytes}); an
+    # over-budget tenant evicts only its own chains. Tenant namespaces
+    # isolate the prefix index whenever prefix_cache is on.
+    prefix_cache_tenants: Optional[Dict[str, int]] = None
     # policies: names resolved via runtime.policies, or instances
     admission: Any = "fifo"     # "fifo" | "priority" | "edf" | "batch"
     preemption: Any = "evict-latest"    # | "lowest-priority"
@@ -155,6 +165,11 @@ class EngineConfig:
                              "common prompt prefix (copy-on-write; implies "
                              "--paged): matched prompts skip prefill for "
                              "the resident region")
+        ap.add_argument("--victim-cache", action="store_true",
+                        help="retain completed requests' prefix chains in "
+                             "a reclaimable victim pool (implies "
+                             "--prefix-cache); evicted weighted-LRU only "
+                             "under allocation pressure")
         ap.add_argument("--block-size", type=int, default=16,
                         help="KV rows per paged block")
         ap.add_argument("--num-blocks", type=int, default=0,
@@ -196,13 +211,15 @@ class EngineConfig:
         """Build an ``EngineConfig`` from ``add_cli_args`` flags.
         ``overrides`` (e.g. ``max_len=...``, or a forced ``admission``)
         win over the parsed flags."""
-        paged = args.paged or args.prefix_cache
+        victim = getattr(args, "victim_cache", False)
+        prefix = args.prefix_cache or victim
+        paged = args.paged or prefix
         kw = dict(
             max_slots=args.slots,
             kv_layout="paged" if paged else "slotted",
             block_size=args.block_size, num_blocks=args.num_blocks,
             watermark=args.watermark, prefill_chunk=args.prefill_chunk,
-            prefix_cache=args.prefix_cache,
+            prefix_cache=prefix, victim_cache=victim,
             admission=args.policy or "fifo", preemption=args.preemption,
             enforce_deadlines=args.enforce_deadlines,
             units=getattr(args, "units", 1),
@@ -411,6 +428,10 @@ class Engine:
             raise ValueError(
                 "prefix_cache shares paged KV blocks between requests; "
                 "it needs kv_layout='paged'")
+        if (c.victim_cache or c.prefix_cache_tenants) and not c.prefix_cache:
+            raise ValueError(
+                "victim_cache / prefix_cache_tenants extend the prefix "
+                "cache; they need prefix_cache=True")
         self.admission = make_admission(c.admission)
         self.preemption = make_preemption(c.preemption)
         self.batch_mode = isinstance(self.admission, BatchAdmission)
@@ -483,6 +504,9 @@ class Engine:
                     num_blocks=c.num_blocks, watermark=c.watermark,
                     prefill_chunk=c.prefill_chunk,
                     prefix_cache=c.prefix_cache,
+                    victim_cache=c.victim_cache,
+                    victim_eviction=c.victim_eviction,
+                    prefix_cache_tenants=c.prefix_cache_tenants,
                     enforce_deadlines=c.enforce_deadlines,
                     units=c.units, prefill_units=c.prefill_units,
                     decode_stages=c.decode_stages, placement=c.placement,
@@ -732,9 +756,39 @@ class Engine:
                     "counters": s.stats(),
                     "units": s.unit_stats(),
                 }
+                if getattr(s.layout, "prefix_cache", False):
+                    pc = s.layout.prefix_cache_stats()
+                    pc["prefill_tokens_saved"] = s.prefill_tokens_saved
+                    pc["bytes_saved"] = (s.prefill_tokens_saved
+                                         * T.kv_row_bytes(self.cfg))
+                    snap["prefix_cache"] = pc
         snap["observability"] = self.config.observability
         snap["metrics"] = self.obs.snapshot()
         return snap
+
+    # -- prefix-cache persistence (victim cache across restarts) ------------
+
+    def save_prefix_cache(self, path: str) -> int:
+        """Serialize the resident prefix index + victim pool to a
+        ``runtime.checkpoint`` artifact (see scheduler.prefix_pool for
+        the chain format). Returns the number of chains saved."""
+        from repro.runtime.scheduler.prefix_pool import save_victim_cache
+        with self._entry_lock():
+            return save_victim_cache(path, self._cache_layout(), self.cfg)
+
+    def restore_prefix_cache(self, path: str) -> int:
+        """Load a ``save_prefix_cache`` artifact into this engine's
+        pool and victim cache (tenants, LRU stamps, hit counts): a
+        restarted engine starts warm. Returns blocks restored."""
+        from repro.runtime.scheduler.prefix_pool import restore_victim_cache
+        with self._entry_lock():
+            return restore_victim_cache(path, self._cache_layout(), self.cfg)
+
+    def _cache_layout(self):
+        if self.scheduler is None:
+            raise ValueError("prefix-cache persistence needs a "
+                             "continuous scheduler (admission != 'batch')")
+        return self.scheduler.layout
 
     def metrics_text(self,
                      extra_gauges: Optional[Dict[str, float]] = None) -> str:

@@ -323,6 +323,41 @@ class LocalOverloadEscalation:
 
 
 # ---------------------------------------------------------------------------
+# victim-cache eviction: which reclaimable prefix block goes first
+# ---------------------------------------------------------------------------
+#
+# The victim pool (scheduler/prefix_pool.VictimCache) sorts its blocks
+# by ``policy.key(view)`` ascending and evicts from the front when an
+# allocation comes up short. ``view`` is an EvictionView: per-block
+# re-match count (``hits``, persistent across revive/re-admit cycles),
+# monotonic admission stamp (``stamp``, one per released chain), page
+# depth within the chain (``page``), and owning ``tenant``. Keys are
+# pure value tuples so eviction order is deterministic.
+
+
+class LruEviction:
+    """Plain LRU: least recently admitted chain first; within a chain,
+    deepest page first — so the chain *head* (the part a shorter match
+    can still use) survives longest."""
+    name = "lru"
+
+    def key(self, view) -> Any:
+        return (view.stamp, -view.page)
+
+
+class WeightedLruEviction:
+    """Recency weighted by proven reuse: a never-re-matched chain
+    evicts before a once-matched one regardless of age (hits is the
+    primary key), then LRU stamp, then deepest page first. The default:
+    a tenant's hot system prompt outlives a burst of one-off prompts
+    admitted after it."""
+    name = "weighted-lru"
+
+    def key(self, view) -> Any:
+        return (view.hits, view.stamp, -view.page)
+
+
+# ---------------------------------------------------------------------------
 # factories (EngineConfig carries policy names or instances)
 # ---------------------------------------------------------------------------
 
@@ -343,6 +378,11 @@ PREEMPTION_POLICIES = {
 PLACEMENT_POLICIES = {
     "round-robin": RoundRobinPlacement,
     "least-loaded": LeastLoadedPlacement,
+}
+
+VICTIM_EVICTION_POLICIES = {
+    "lru": LruEviction,
+    "weighted-lru": WeightedLruEviction,
 }
 
 ESCALATION_POLICIES = {
@@ -387,6 +427,19 @@ def make_placement(spec) -> Any:
             raise ValueError(
                 f"placement policy {spec!r} not in "
                 f"{sorted(PLACEMENT_POLICIES)}") from None
+    return spec
+
+
+def make_victim_eviction(spec) -> Any:
+    """Resolve a victim-eviction policy name or pass an instance
+    through."""
+    if isinstance(spec, str):
+        try:
+            return VICTIM_EVICTION_POLICIES[spec]()
+        except KeyError:
+            raise ValueError(
+                f"victim-eviction policy {spec!r} not in "
+                f"{sorted(VICTIM_EVICTION_POLICIES)}") from None
     return spec
 
 

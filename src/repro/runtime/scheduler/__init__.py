@@ -8,6 +8,9 @@ concern around the multi-unit execution core:
 * ``allocator`` — the refcounted fixed-pool ``BlockAllocator``;
 * ``layouts`` — ``SlottedLayout`` / ``PagedLayout`` KV-cache surgery
   (block tables, prefix sharing, copy-on-write);
+* ``prefix_pool`` — ``VictimCache``: retention of released prefix
+  chains (tenant quotas, weighted-LRU eviction) and its checkpoint
+  save/restore;
 * ``prefill`` — one-shot / prefix-resume / chunked prompt admission;
 * ``units`` — ``ExecutionCore``: unit-aware executors on modeled
   clocks (prefill/decode disaggregation, pipelined in-flight decode);
@@ -23,6 +26,9 @@ from repro.runtime.scheduler.allocator import BlockAllocator
 from repro.runtime.scheduler.core import ContinuousScheduler
 from repro.runtime.scheduler.layouts import (PagedLayout, SlottedLayout,
                                              _PagedReservation)
+from repro.runtime.scheduler.prefix_pool import (VictimCache,
+                                                 restore_victim_cache,
+                                                 save_victim_cache)
 from repro.runtime.scheduler.types import (COUNTER_KEYS, FINISH_REASONS,
                                            Completion, Request, SchedEvent,
                                            SchedulerConfig, SlotFailure,
@@ -41,4 +47,6 @@ __all__ = [
     # multi-unit execution core
     "UnitSpec", "UnitExecutor", "PrefillExecutor", "DecodeExecutor",
     "ExecutionCore",
+    # prefix-cache service
+    "VictimCache", "save_victim_cache", "restore_victim_cache",
 ]

@@ -11,7 +11,7 @@ handoff/preemption/failure interleavings).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 __all__ = ["BlockAllocator"]
 
@@ -61,7 +61,17 @@ class BlockAllocator:
         """Current reference count of ``block`` (0 = not held)."""
         return self._refs.get(block, 0)
 
-    def alloc(self, n: int, watermark: int = 0) -> Optional[List[int]]:
+    def alloc(self, n: int, watermark: int = 0,
+              reclaim: Optional[Callable[[int], None]] = None,
+              ) -> Optional[List[int]]:
+        """``reclaim``, when given, is invoked with the block shortfall
+        before giving up — the victim-cache hook: the layout evicts up
+        to that many reclaimable (refcount-1, request-completed) prefix
+        blocks back into the free pool, and the allocation is retried.
+        Victim blocks therefore never block an admission, but are only
+        ever evicted under exactly this allocation pressure."""
+        if n + watermark > len(self._free) and reclaim is not None:
+            reclaim(n + watermark - len(self._free))
         if n + watermark > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]

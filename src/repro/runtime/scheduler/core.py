@@ -236,11 +236,10 @@ class ContinuousScheduler:
 
     def request_cancel(self, ticket: _Ticket) -> None:
         """Flag a ticket for cancellation (the RequestHandle's path).
-        Only flips a flag and records the ticket — retirement happens at
-        the next step boundary (or inside the admission loop, for a
-        cancel issued from another stream's token callback mid-pass), so
-        this is safe to call from inside a token callback. The recorded
-        list keeps the purge O(#cancelled), not O(waiting)."""
+        Only flips a flag and records the ticket — retirement happens
+        at the next step boundary (or inside the admission loop, for a
+        cancel from another stream's token callback mid-pass), so this
+        is token-callback safe; the list keeps the purge O(#cancelled)."""
         ticket.cancelled = True
         self._cancel_requests.append(ticket)
 
@@ -423,14 +422,16 @@ class ContinuousScheduler:
     def stats(self) -> Dict[str, int]:
         """Lifecycle counters accumulated so far (the serving bench
         reports preemptions when sweeping the admission watermark)."""
-        c = Counter(e.kind for e in self.events)
+        c, lay = Counter(e.kind for e in self.events), self.layout
         return {"requests_submitted": self._submit_seq,
                 "admissions": c["admit"], "evictions": c["evict"],
                 "preemptions": c["preempt"], "slot_failures": c["fail"],
                 "cancellations": c["cancel"], "sheds": c["shed"],
                 "steps": self.step_count,
                 "tokens_generated": self.tokens_generated,
-                "prefix_hits": getattr(self.layout, "prefix_hits", 0),
+                "prefix_hits": getattr(lay, "prefix_hits", 0),
+                "victim_hits": getattr(lay, "victim_hits", 0),
+                "victim_evictions": getattr(lay, "victim_evictions", 0),
                 "prefill_tokens_total": self.prefill_tokens_total,
                 "prefill_tokens_saved": self.prefill_tokens_saved}
 
@@ -471,8 +472,7 @@ class ContinuousScheduler:
     def _emit(self, ticket: _Ticket, tok: int) -> None:
         """Append a token and stream it to the handle. After a failure
         re-queue the greedy re-decode re-produces the already-streamed
-        prefix; the handle dedups by index so consumers see each token
-        once."""
+        prefix; the handle dedups by index: each token seen once."""
         ticket.emitted.append(tok)
         self.tokens_generated += 1
         if ticket.handle is not None:

@@ -24,6 +24,7 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.scheduler.allocator import BlockAllocator
+from repro.runtime.scheduler.prefix_pool import VictimCache
 from repro.runtime.scheduler.types import Request, SchedulerConfig
 
 __all__ = ["SlottedLayout", "PagedLayout", "_PagedReservation"]
@@ -148,6 +149,7 @@ class _PagedReservation:
     shared_pages: int = 0
     seed_blocks: List[int] = field(default_factory=list)
     matched_rows: int = 0
+    tenant: str = ""                    # prefix-cache namespace (Request.tenant)
 
 
 class PagedLayout:
@@ -196,18 +198,28 @@ class PagedLayout:
         # prefill_extend, so gate on the same support predicate as
         # chunked prefill (silent fallback, like prefill_chunk)
         self.prefix_cache = s.prefix_cache and T.supports_chunked_prefill(cfg)
-        # chained hash of a block-aligned token prefix -> (resident block
-        # holding its last page of K/V rows, that page's tokens). The
-        # tokens are compared on every match, so a hash collision can
-        # degrade to a miss but never share foreign K/V.
-        self._prefix_full: Dict[int, Tuple[int, np.ndarray]] = {}
-        # chained hash of a prompt's full pages -> [(tail block, prompt
-        # length, tail tokens), ...] for prompts whose last page is
-        # partially filled: one bucket per full-page chain, so a
-        # boundary probe is a single lookup plus tail comparisons
-        self._prefix_partial: Dict[int, List[Tuple[int, int,
-                                                   np.ndarray]]] = {}
-        self._block_keys: Dict[int, List[Tuple[str, int]]] = {}
+        # tenant-scoped prefix index: each namespace maps a chained hash
+        # of a block-aligned token prefix -> (resident block holding its
+        # last page of K/V rows, that page's tokens, parent chain key).
+        # A request only probes its own tenant's namespace, so a hash
+        # hit can never map another tenant's K/V; the tokens are also
+        # compared on every match, so a collision within a namespace
+        # degrades to a miss, never to sharing foreign K/V. The parent
+        # key makes the index walkable for checkpoint export (hashes
+        # are not invertible); empty namespaces are pruned so the outer
+        # dicts are empty exactly when the index is.
+        self._prefix_full: Dict[str, Dict[int, Tuple[int, np.ndarray,
+                                                     int]]] = {}
+        # tenant -> chained hash of a prompt's full pages -> [(tail
+        # block, prompt length, tail tokens), ...] for prompts whose
+        # last page is partially filled: one bucket per full-page
+        # chain, so a boundary probe is a single lookup plus tail
+        # comparisons
+        self._prefix_partial: Dict[str, Dict[int, List[Tuple[
+            int, int, np.ndarray]]]] = {}
+        self._block_keys: Dict[int, List[Tuple[str, str, int]]] = {}
+        self._block_tenant: Dict[int, str] = {}     # indexed block -> owner
+        self._slot_tenant: Dict[int, str] = {}      # bound slot -> tenant
         self._shared_pages: Dict[int, int] = {}     # slot -> shared table pages
         self._table_pending: Dict[int, List[int]] = {}  # bound, not inserted
         self._seed = jax.jit(
@@ -215,6 +227,19 @@ class PagedLayout:
         self._copy_block = jax.jit(
             lambda c, src, dst: T.paged_copy_block(cfg, c, src, dst))
         self.prefix_hits = 0            # admissions that matched a chain
+        self.victim_hits = 0            # matches that touched pooled blocks
+        self.victim_evictions = 0       # pooled blocks freed under pressure
+        # victim cache: released refcount-1 indexed blocks park here
+        # (still held, K/V resident, index entries alive) instead of
+        # freeing, so the prefix index outlives requests and drain
+        # epochs; evicted only under allocation pressure
+        self.victim: Optional[VictimCache] = None
+        self._protect: frozenset = frozenset()      # mid-reservation blocks
+        if self.prefix_cache and s.victim_cache:
+            self.victim = VictimCache(
+                block_bytes=s.block_size * T.kv_row_bytes(cfg),
+                policy=s.victim_eviction,
+                quotas=s.prefix_cache_tenants)
 
     def _prompt_need(self, req: Request) -> int:
         return max(1, -(-len(req.prompt) // self.block_size))
@@ -232,20 +257,24 @@ class PagedLayout:
     def _chain(key: int, tokens: np.ndarray) -> int:
         return hash((key, np.ascontiguousarray(tokens, np.int32).tobytes()))
 
-    def match_prefix(self, prompt: np.ndarray) -> Tuple[List[int], int]:
-        """Longest resident match for ``prompt``: returns (source blocks
-        covering pages 0..ceil(matched/bs)-1, matched row count). Matches
-        are capped at ``len(prompt) - 1`` rows — the last prompt token is
-        always recomputed so admission has logits to sample the first
-        output token from."""
+    def match_prefix(self, prompt: np.ndarray,
+                     tenant: str = "") -> Tuple[List[int], int]:
+        """Longest resident match for ``prompt`` within ``tenant``'s
+        namespace: returns (source blocks covering pages
+        0..ceil(matched/bs)-1, matched row count). Matches are capped at
+        ``len(prompt) - 1`` rows — the last prompt token is always
+        recomputed so admission has logits to sample the first output
+        token from."""
         bs = self.block_size
+        full = self._prefix_full.get(tenant, {})
+        partial = self._prefix_partial.get(tenant, {})
         cap = len(prompt) - 1
         src: List[int] = []
         key = 0
         while (len(src) + 1) * bs <= cap:
             page = prompt[len(src) * bs:(len(src) + 1) * bs]
             nxt = self._chain(key, page)
-            entry = self._prefix_full.get(nxt)
+            entry = full.get(nxt)
             if entry is None or not np.array_equal(entry[1], page):
                 break
             src.append(entry[0])
@@ -257,11 +286,11 @@ class PagedLayout:
         # else (b) a resident partial tail block with an identical fill
         if (k + 1) * bs == len(prompt):
             page = prompt[k * bs:]
-            entry = self._prefix_full.get(self._chain(key, page))
+            entry = full.get(self._chain(key, page))
             if entry is not None and np.array_equal(entry[1], page):
                 return src + [entry[0]], cap
         best = None
-        for blk, length, tail in self._prefix_partial.get(key, ()):
+        for blk, length, tail in partial.get(key, ()):
             if length <= cap and (best is None or length > best[1]) \
                     and np.array_equal(tail, prompt[k * bs:length]):
                 best = (blk, length)
@@ -278,35 +307,51 @@ class PagedLayout:
         if not self.prefix_cache:
             return
         bs = self.block_size
+        tenant = self._slot_tenant.get(slot, "")
         table = self.block_tables[slot]
         key = 0
         for p in range(len(prompt) // bs):
             page = prompt[p * bs:(p + 1) * bs]
-            key = self._chain(key, page)
-            if key not in self._prefix_full:
+            nxt = self._chain(key, page)
+            full = self._prefix_full.setdefault(tenant, {})
+            if nxt not in full:
                 blk = int(table[p])
-                self._prefix_full[key] = (blk, np.array(page, np.int32))
-                self._block_keys.setdefault(blk, []).append(("full", key))
+                full[nxt] = (blk, np.array(page, np.int32), key)
+                self._block_keys.setdefault(blk, []).append(
+                    ("full", tenant, nxt))
+                self._block_tenant[blk] = tenant
+            key = nxt
         if len(prompt) % bs:
             tail = np.array(prompt[-(len(prompt) % bs):], np.int32)
-            bucket = self._prefix_partial.setdefault(key, [])
+            bucket = self._prefix_partial.setdefault(
+                tenant, {}).setdefault(key, [])
             if not any(length == len(prompt) and np.array_equal(t, tail)
                        for _, length, t in bucket):
                 blk = int(table[len(prompt) // bs])
                 bucket.append((blk, len(prompt), tail))
-                self._block_keys.setdefault(blk, []).append(("partial", key))
+                self._block_keys.setdefault(blk, []).append(
+                    ("partial", tenant, key))
+                self._block_tenant[blk] = tenant
 
     def _unregister(self, freed: List[int]) -> None:
         for b in freed:
-            for kind, key in self._block_keys.pop(b, ()):
+            self._block_tenant.pop(b, None)
+            for kind, tenant, key in self._block_keys.pop(b, ()):
                 if kind == "full":
-                    self._prefix_full.pop(key, None)
+                    ns = self._prefix_full.get(tenant)
+                    if ns is not None:
+                        ns.pop(key, None)
+                        if not ns:
+                            del self._prefix_full[tenant]
                     continue
-                bucket = self._prefix_partial.get(key)
+                tns = self._prefix_partial.get(tenant)
+                bucket = tns.get(key) if tns is not None else None
                 if bucket is not None:
                     bucket[:] = [e for e in bucket if e[0] != b]
                     if not bucket:
-                        del self._prefix_partial[key]
+                        del tns[key]
+                        if not tns:
+                            del self._prefix_partial[tenant]
 
     def validate(self, req: Request) -> None:
         """Reject requests the pool can never serve. Two separate
@@ -334,28 +379,69 @@ class PagedLayout:
         boundary page is always among the private blocks (see
         ``_PagedReservation``). Returns None when the pool (minus the
         admission watermark) can't supply the private need — admission
-        waits rather than over-commit."""
-        if 1 + self.watermark > self.alloc.available:
+        waits rather than over-commit. Victim-pooled blocks count as
+        available (they are reclaimable on demand); a matched chain's
+        pooled blocks are *revived* — the pool's reference becomes the
+        slot's — rather than re-allocated, which is what makes a hit on
+        a completed request's chain (a cross-request victim hit) free."""
+        victims = len(self.victim) if self.victim is not None else 0
+        if 1 + self.watermark > self.alloc.available + victims:
             # the boundary page is always private, so no reservation can
             # succeed — skip the O(prompt) prefix match a dry pool would
             # otherwise re-run every scheduler step
             return None
-        src: List[int] = []
-        matched = 0
-        if self.prefix_cache and req.embeds is None:
-            src, matched = self.match_prefix(req.prompt)
-        shared_pages = matched // self.block_size
-        private = self.alloc.alloc(self._prompt_need(req) - shared_pages,
-                                   watermark=self.watermark)
-        if private is None:
-            return None
+        need = self._prompt_need(req)
+        while True:
+            src: List[int] = []
+            matched = 0
+            if self.prefix_cache and req.embeds is None:
+                src, matched = self.match_prefix(req.prompt, req.tenant)
+            shared_pages = matched // self.block_size
+            reclaim = None
+            if self.victim is not None:
+                # eviction under this allocation's pressure must not eat
+                # the chain it is about to share or seed from
+                self._protect = frozenset(src)
+                reclaim = self._reclaim
+            try:
+                private = self.alloc.alloc(need - shared_pages,
+                                           watermark=self.watermark,
+                                           reclaim=reclaim)
+            finally:
+                self._protect = frozenset()
+            if private is not None:
+                break
+            if self.victim is None:
+                return None
+            pooled = [b for b in src if b in self.victim]
+            if not pooled:
+                return None
+            # every evictable block is protected by this very match:
+            # sacrifice the deepest matched page and retry shorter
+            self.victim.drop(pooled[-1:])
+            self._free_blocks(pooled[-1:])
+            self.victim_evictions += 1
         chain = src[:shared_pages]
-        self.alloc.share(chain)
         if matched:
             self.prefix_hits += 1
+        if self.victim is None:
+            self.alloc.share(chain)
+        else:
+            if matched and any(b in self.victim for b in src):
+                self.victim_hits += 1
+            share = []
+            for b in chain:
+                if b in self.victim:
+                    self.victim.revive(b)
+                else:
+                    share.append(b)
+            self.alloc.share(share)
+            if matched:
+                self.victim.record_match(src)
         return _PagedReservation(blocks=chain + private,
                                  shared_pages=shared_pages,
-                                 seed_blocks=src, matched_rows=matched)
+                                 seed_blocks=src, matched_rows=matched,
+                                 tenant=req.tenant)
 
     def bind(self, slot: int, res: _PagedReservation) -> None:
         """Take ownership of the reservation's blocks for ``slot``. The
@@ -365,6 +451,7 @@ class PagedLayout:
         row through the table — a mid-prefill slot must direct those at
         the null block, not at a block another request shares."""
         self._slot_blocks[slot] = list(res.blocks)
+        self._slot_tenant[slot] = res.tenant
         self._shared_pages[slot] = res.shared_pages
         self._table_pending[slot] = list(res.blocks)
 
@@ -424,9 +511,12 @@ class PagedLayout:
         lie strictly below the prompt tail, decode writes strictly above
         it. It is kept as the safety net the sharing invariant promises.)
         Growth ignores the admission watermark — the headroom it guards
-        exists precisely for the running requests' growth."""
+        exists precisely for the running requests' growth — but does
+        reclaim victim-pooled blocks before failing into a preemption:
+        idle cached prefixes must never evict a live request."""
         page = pos // self.block_size
-        blocks = self.alloc.alloc(1)
+        blocks = self.alloc.alloc(
+            1, reclaim=self._reclaim if self.victim is not None else None)
         if blocks is None:
             return False
         cur = int(self.block_tables[slot, page])
@@ -435,18 +525,70 @@ class PagedLayout:
                                           jnp.int32(blocks[0]))
             held = self._slot_blocks[slot]
             held[held.index(cur)] = blocks[0]
-            self._unregister(self.alloc.release([cur]))
+            self._free_blocks([cur])
         else:
             self._slot_blocks[slot].append(blocks[0])
         self.block_tables[slot, page] = blocks[0]
         return True
 
+    def _free_blocks(self, blocks: List[int]) -> None:
+        """The one true-free path: drop a reference per block, and for
+        blocks that actually leave the pool, invalidate their index
+        entries and their victim-cache hit history (block ids are
+        reused; a fresh allocation must not inherit a dead chain's
+        heat)."""
+        freed = self.alloc.release(blocks)
+        self._unregister(freed)
+        if self.victim is not None:
+            self.victim.forget(freed)
+
+    def _reclaim(self, shortfall: int) -> None:
+        """Allocation-pressure hook (see BlockAllocator.alloc): evict up
+        to ``shortfall`` victim-pooled blocks, least valuable first, so
+        the retried allocation can succeed. Blocks the in-flight
+        reservation matched are protected."""
+        picks = self.victim.pick(shortfall, exclude=self._protect)
+        if picks:
+            self.victim.drop(picks)
+            self._free_blocks(picks)
+            self.victim_evictions += len(picks)
+
+    def enforce_quota(self, tenant: str) -> None:
+        """Evict the tenant's own pooled blocks (never another's) until
+        it is back under its configured byte budget."""
+        evict = self.victim.over_quota(tenant)
+        if evict:
+            self.victim.drop(evict)
+            self._free_blocks(evict)
+            self.victim_evictions += len(evict)
+
     def release(self, slot: int) -> None:
+        """Give back a slot's blocks. Without a victim cache every last
+        reference frees the block (and kills its index entries); with
+        one, indexed blocks whose last reference this was transfer
+        ownership to the victim pool instead — K/V resident, index
+        alive — so the chain survives the request (and the drain epoch)
+        until allocation pressure reclaims it."""
         blocks = self._slot_blocks.pop(slot, [])
         self._shared_pages.pop(slot, None)
         self._table_pending.pop(slot, None)
+        tenant = self._slot_tenant.pop(slot, "")
         if blocks:
-            self._unregister(self.alloc.release(blocks))
+            if self.victim is not None:
+                keep = [(self._block_tenant.get(b, tenant), page, b)
+                        for page, b in enumerate(blocks)
+                        if self.alloc.refcount(b) == 1
+                        and b in self._block_keys]
+                keepset = {b for _, _, b in keep}
+                rest = [b for b in blocks if b not in keepset]
+            else:
+                keep, rest = [], blocks
+            if rest:
+                self._free_blocks(rest)
+            if keep:
+                self.victim.admit(keep)
+                for t in {t for t, _, _ in keep}:
+                    self.enforce_quota(t)
         self.block_tables[slot] = 0
 
     def kv_stats(self, s: SchedulerConfig, cfg: ModelConfig) -> Dict[str, float]:
@@ -454,18 +596,41 @@ class PagedLayout:
         bs = s.block_size
         # the slotted baseline reserves the *configured* max_len, not the
         # paged path's block-rounded max_len
-        return {
+        out = {
             "slotted_kv_reserved_bytes": float(s.max_slots * s.max_len * row),
             "paged_kv_pool_bytes": float(self.alloc.capacity * bs * row),
             "paged_kv_hwm_bytes": float(self.alloc.hwm * bs * row),
             "paged_kv_hwm_blocks": float(self.alloc.hwm),
         }
+        if self.victim is not None:
+            out["victim_kv_blocks"] = float(len(self.victim))
+            out["victim_kv_bytes"] = float(self.victim.total_bytes)
+        return out
+
+    def prefix_cache_stats(self) -> Dict[str, object]:
+        """Cache-service gauges for Engine.snapshot / the server's
+        /status: hit counters plus victim-pool occupancy, per tenant."""
+        out: Dict[str, object] = {
+            "enabled": self.prefix_cache,
+            "victim_cache": self.victim is not None,
+            "prefix_hits": self.prefix_hits,
+            "victim_hits": self.victim_hits,
+            "victim_evictions": self.victim_evictions,
+        }
+        if self.victim is not None:
+            out["victim_blocks"] = len(self.victim)
+            out["victim_bytes"] = self.victim.total_bytes
+            out["per_tenant_bytes"] = self.victim.per_tenant_bytes()
+            out["tenant_quotas"] = dict(self.victim.quotas)
+        return out
 
     def check(self, occupied_slots: set, max_slots: int) -> None:
         """Block books: every held block's reference count equals the
         number of table entries naming it across occupied slots (one
-        per slot — a slot never maps the same block at two pages), and
-        the prefix index only names held blocks."""
+        per slot — a slot never maps the same block at two pages) plus
+        one for victim-pool ownership — a block is never simultaneously
+        live and pooled — and the prefix index only names held
+        blocks."""
         self.alloc.check()
         assert set(self._slot_blocks) == occupied_slots, \
             (set(self._slot_blocks), occupied_slots)
@@ -481,11 +646,20 @@ class PagedLayout:
                 assert sorted(entries.tolist()) == sorted(blocks), \
                     f"slot {slot}: table and block list disagree"
             refs.update(blocks)
+        if self.victim is not None:
+            for blk in self.victim.blocks:
+                assert blk not in refs, \
+                    f"block {blk} simultaneously live and in victim pool"
+                assert blk in self._block_keys, \
+                    f"victim pool holds unindexed block {blk}"
+                refs[blk] += 1
         assert dict(refs) == self.alloc._refs, (dict(refs), self.alloc._refs)
         for slot in range(max_slots):
             if slot not in occupied_slots:
                 assert not self.block_tables[slot].any(), \
                     f"slot {slot}: stale block table"
-        for blk in self._block_keys:
+        for blk, keys in self._block_keys.items():
             assert blk in self.alloc._refs, \
                 f"prefix index names freed block {blk}"
+            assert all(t == self._block_tenant.get(blk) for _, t, _ in keys), \
+                f"block {blk} indexed under two tenants"

@@ -8,7 +8,7 @@ the internal ticket/chunked-prefill bookkeeping records. No jax.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -22,7 +22,8 @@ FINISH_REASONS = ("eos", "length", "cancelled", "failed", "timeout",
 COUNTER_KEYS = (
     "requests_submitted", "admissions", "evictions", "preemptions",
     "slot_failures", "cancellations", "sheds", "steps", "tokens_generated",
-    "prefix_hits", "prefill_tokens_total", "prefill_tokens_saved")
+    "prefix_hits", "victim_hits", "victim_evictions",
+    "prefill_tokens_total", "prefill_tokens_saved")
 
 
 @dataclass
@@ -39,6 +40,10 @@ class Request:
     # as "failed" instead of re-queueing; None = restart forever (the
     # pre-lifecycle behavior, and the token-identity default)
     max_restarts: Optional[int] = None
+    # prefix-cache namespace: a request only ever matches (and registers)
+    # prefix chains under its own tenant, so a hash hit can never map
+    # another tenant's K/V. "" is the default shared namespace.
+    tenant: str = ""
 
 
 @dataclass
@@ -123,6 +128,21 @@ class SchedulerConfig:
     # configs outside supports_chunked_prefill (the mid-prompt resume
     # needs the position-indexed extend path).
     prefix_cache: bool = False
+    # victim cache (requires prefix_cache): when a request completes,
+    # its refcount-1 indexed blocks move to a reclaimable victim pool
+    # instead of freeing, so the prefix index outlives the request and
+    # cold admissions (even across drain epochs) still hit. Victim
+    # blocks are evicted — weighted-LRU order — only under allocation
+    # pressure, and count as available for admission.
+    victim_cache: bool = False
+    # eviction order among victim blocks: a name from
+    # policies.VICTIM_EVICTION_POLICIES ("lru" | "weighted-lru") or a
+    # policy instance
+    victim_eviction: Any = "weighted-lru"
+    # per-tenant victim-pool byte budgets ({tenant: bytes}); a tenant
+    # that exceeds its budget evicts only its own chains (oldest first),
+    # never another tenant's. Unlisted tenants are unbudgeted.
+    prefix_cache_tenants: Optional[Dict[str, int]] = None
     # wall-clock deadline ENFORCEMENT (EDF admission only *orders* by
     # deadline): a request whose due instant (arrival_s + deadline_s,
     # see policies.request_due_s) passes is shed at the next step

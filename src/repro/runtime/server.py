@@ -205,11 +205,16 @@ class EngineServer:
         priority = body.get("priority", 0)
         if not isinstance(priority, int):
             raise _BadRequest("'priority' must be an int")
+        tenant = body.get("tenant", "")
+        if not isinstance(tenant, str):
+            raise _BadRequest("'tenant' must be a string (prefix-cache "
+                              "namespace)")
         req = Request(
             id=next(self._ids),
             prompt=np.asarray(prompt, np.int32),
             max_new_tokens=max_new, eos=eos, priority=priority,
-            deadline_s=float(deadline_s) if deadline_s is not None else None)
+            deadline_s=float(deadline_s) if deadline_s is not None else None,
+            tenant=tenant)
         with self._inflight_lock:
             if self._inflight >= self.config.max_inflight:
                 raise _Overloaded(self.config.max_inflight)

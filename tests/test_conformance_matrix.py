@@ -6,7 +6,7 @@ through test_scheduler.py and test_engine_lifecycle.py): under greedy
 sampling, EVERY serving configuration —
 
     {slotted, slotted+chunked-prefill, paged, paged+chunked-prefill,
-     paged+prefix-cache, paged+chunked+prefix,
+     paged+prefix-cache, paged+chunked+prefix, paged+prefix+victim,
      disaggregated (dedicated prefill unit + 2 decode stages),
      pipelined-decode (stage-partitioned decode step)}
   x {fifo, priority, deadline-EDF, batch}
@@ -67,6 +67,13 @@ LAYOUTS = {
     "paged-chunked-prefix": dict(kv_layout="paged", block_size=8,
                                  num_blocks=18, prefill_chunk=4,
                                  prefix_cache=True),
+    # victim cache on top of prefix sharing: completed chains park in a
+    # reclaimable pool instead of freeing. Retention moves prefill work
+    # only — tokens must stay oracle-identical, and at drain the books
+    # balance against the parked population instead of zero.
+    "paged-prefix-victim": dict(kv_layout="paged", block_size=8,
+                                num_blocks=18, prefix_cache=True,
+                                victim_cache=True),
     # multi-unit execution core: prefill/decode disaggregation (one
     # dedicated prefill unit, two decode stages) over the full paged +
     # chunked feature load, and pipelined stage-partitioned decode on
@@ -100,6 +107,8 @@ FAST = {
     ("rem", "paged-chunked", "priority", "lowest-priority"),
     ("rem", "paged-prefix", "edf", "lowest-priority"),
     ("rem", "paged-chunked-prefix", "fifo", "evict-latest"),
+    ("scan", "paged-prefix-victim", "fifo", "evict-latest"),
+    ("rem", "paged-prefix-victim", "priority", "lowest-priority"),
     ("scan", "disagg", "fifo", "evict-latest"),
     ("rem", "disagg", "priority", "lowest-priority"),
     ("scan", "pipelined-decode", "fifo", "evict-latest"),
@@ -189,11 +198,17 @@ def test_matrix_cell_matches_static_oracle(zoo, cfg_name, layout, admission,
     st = sched.stats()
     assert st["admissions"] >= len(reqs)
     if kw.get("kv_layout") == "paged":
-        # the pool comes home whole: no leaked or double-freed blocks
-        assert sched.alloc.in_use == 0
-        assert sched.alloc.available == sched.alloc.capacity
+        # the pool comes home whole: no leaked or double-freed blocks.
+        # With the victim cache on, "home" is the parked population —
+        # every in-use block is accounted for by the victim pool.
+        parked = len(sched.layout.victim) if kw.get("victim_cache") else 0
+        assert sched.alloc.in_use == parked
+        assert sched.alloc.available == sched.alloc.capacity - parked
         assert not sched.block_tables.any()
         assert not sched.cache_len.any() and not sched.tokens.any()
+        if kw.get("victim_cache"):
+            assert parked > 0, "no chain survived the drain"
+            sched.layout.check(set(), 3)
     if kw.get("prefix_cache"):
         assert st["prefix_hits"] > 0, "shared-prefix workload never shared"
         assert st["prefill_tokens_saved"] > 0
@@ -240,3 +255,6 @@ def test_invalid_cells_are_rejected(zoo):
     with pytest.raises(ValueError, match="prefix_cache"):
         Engine(cfg, params, EngineConfig(kv_layout="slotted",
                                          prefix_cache=True))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(cfg, params, EngineConfig(kv_layout="paged",
+                                         victim_cache=True))

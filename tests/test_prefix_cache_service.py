@@ -1,0 +1,290 @@
+"""Prefix-cache service correctness battery.
+
+The victim cache turns the prefix index into a cross-request service:
+released refcount-1 prefix chains park in a reclaimable pool instead of
+freeing, so a later request — in a later drain epoch, after the pool
+fully idled — can still resume from them. These tests pin the contract:
+
+* a refcount-0 chain survives its owner's completion and is re-hit by a
+  cold admission (``victim_hits`` counts exactly these; it is
+  structurally zero with the victim cache off);
+* under allocation pressure the weighted-LRU policy evicts cold chains
+  before hot ones (plain LRU would evict by recency alone) — and an
+  idle parked chain is always sacrificed before a live request is
+  preempted;
+* ``save_prefix_cache``/``restore_prefix_cache`` round-trip the pool
+  bit-identically: a fresh engine restored from the checkpoint produces
+  the same tokens AND registers victim hits on the replay;
+* per-tenant byte quotas evict only the breaching tenant's chains, and
+  a tenant never resolves another tenant's identical prompt to shared
+  blocks (namespace isolation);
+* regression: the prefix index follows block lifetime across drain
+  epochs — entries for parked blocks stay alive, entries for freed
+  blocks die with them.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.policies import (LruEviction, WeightedLruEviction,
+                                    make_victim_eviction)
+from repro.runtime.scheduler import Request, VictimCache
+
+CFG = ModelConfig(
+    name="tiny-pc", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+    param_dtype="float32", attn_chunk=16, remat=False)
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+
+BLOCK = 8
+ROW_BYTES = T.kv_row_bytes(CFG)
+
+
+def _engine(victim=True, num_blocks=24, tenants=None, **kw):
+    return Engine(CFG, PARAMS, EngineConfig(
+        max_slots=4, max_len=64, kv_layout="paged", block_size=BLOCK,
+        num_blocks=num_blocks, prefix_cache=True, victim_cache=victim,
+        prefix_cache_tenants=tenants, greedy=True, seed=0, debug=True,
+        **kw))
+
+
+def _prompt(seed, n=20):
+    return (np.arange(n, dtype=np.int32) * (seed + 3) + seed) % CFG.vocab_size
+
+
+def _run(eng, prompts, tenants=None, max_new=8):
+    tenants = tenants or [""] * len(prompts)
+    outs = eng.generate([Request(i, p, max_new_tokens=max_new, tenant=t)
+                         for i, (p, t) in enumerate(zip(prompts, tenants))])
+    return [c.tokens for c in sorted(outs, key=lambda c: c.id)]
+
+
+# -- cross-drain survival ---------------------------------------------------
+
+def test_victim_chain_survives_completion_and_rehits():
+    """Wave 1 drains fully (refcount-0 everywhere); wave 2 re-sends the
+    same prompt and must resume from the parked chain: victim_hits > 0,
+    prefill work saved, and tokens identical to an uncached engine."""
+    p = _prompt(1)
+    eng = _engine(victim=True)
+    w1 = _run(eng, [p])
+    lay = eng.scheduler.layout
+    assert eng.scheduler.alloc.in_use == len(lay.victim) > 0, \
+        "completed chain did not park in the victim pool"
+    assert lay._prefix_full, "prefix index died with the drain epoch"
+    w2 = _run(eng, [p])
+    snap = eng.snapshot()["prefix_cache"]
+    assert snap["victim_hits"] > 0, snap
+    assert snap["prefill_tokens_saved"] > 0 and snap["bytes_saved"] > 0
+    assert np.array_equal(w1[0], w2[0]), "cache hit changed the tokens"
+    # oracle: same prompt on a victim-less engine gives the same stream
+    cold = _run(_engine(victim=False), [p])
+    assert np.array_equal(cold[0], w2[0])
+
+
+def test_victim_off_is_structural_zero():
+    """With the victim cache off the same two-wave trace shows zero
+    cross-drain hits (the discriminating counter is victim_hits, not
+    prefix_hits, which within-wave live sharing can also bump)."""
+    p = _prompt(2)
+    eng = _engine(victim=False)
+    _run(eng, [p])
+    assert eng.scheduler.alloc.in_use == 0
+    assert not eng.scheduler.layout._prefix_full
+    _run(eng, [p])
+    snap = eng.snapshot()["prefix_cache"]
+    assert snap["victim_hits"] == 0
+    assert "victim_blocks" not in snap  # pool stats only appear when on
+
+
+def test_prefix_index_follows_block_lifetime():
+    """Regression for the index-lifetime bug: entries must outlive their
+    drain epoch exactly as long as their blocks do — alive while parked,
+    gone once evicted under pressure."""
+    eng = _engine(victim=True, num_blocks=10)  # 9 usable blocks
+    _run(eng, [_prompt(3)])                    # parks ~3 blocks
+    lay = eng.scheduler.layout
+    parked = set(lay.victim.blocks)
+    assert parked and all(b in lay._block_keys for b in parked)
+    # a fat unrelated request forces reclaim of (some) parked blocks;
+    # eviction is lazy — only the allocation shortfall is taken
+    _run(eng, [_prompt(99, n=40)], max_new=16)
+    assert lay.victim_evictions > 0, "pressure did not reclaim parked chains"
+    # at drain the index covers exactly the parked blocks: no entry
+    # outlived its block (the original bug) and none died early
+    assert set(lay._block_keys) == set(lay.victim.blocks)
+    assert eng.scheduler.alloc.in_use == len(lay.victim)
+    lay.check(set(), 4)
+
+
+# -- eviction policy --------------------------------------------------------
+
+def _seed_pool(policy):
+    """Two single-block tenants' chains: A admitted, revived + re-parked
+    (newer stamp AND one recorded hit); B parked in between, never hit."""
+    vc = VictimCache(block_bytes=64, policy=policy)
+    vc.admit([("", 0, 11)])              # A parks (stamp 1)
+    vc.admit([("", 0, 22)])              # B parks (stamp 2)
+    vc.record_match([11])
+    vc.revive(11)                      # A resumes...
+    vc.admit([("", 0, 11)])              # ...and re-parks (stamp 3, 1 hit)
+    return vc
+
+
+def test_weighted_lru_keeps_hot_chain():
+    """Weighted LRU evicts the never-hit chain first even though it is
+    not the oldest; plain LRU evicts strictly by recency."""
+    assert _seed_pool(WeightedLruEviction()).pick(1, exclude=()) == [22]
+    assert _seed_pool(LruEviction()).pick(1, exclude=()) == [22]
+    # flip recency so the policies disagree: B re-parks last
+    for policy, expect in ((WeightedLruEviction(), 22), (LruEviction(), 11)):
+        vc = _seed_pool(policy)
+        vc.revive(22)
+        vc.admit([("", 0, 22)])          # B newest but still zero hits
+        assert vc.pick(1, exclude=()) == [expect], policy.name
+
+
+def test_deeper_pages_evict_first_within_a_chain():
+    """Ties broken deepest-page-first so the chain head (most reusable
+    prefix) survives longest."""
+    vc = VictimCache(block_bytes=64)
+    vc.admit([("", 0, 5), ("", 1, 6), ("", 2, 7)])   # one chain, one stamp
+    assert vc.pick(2, exclude=()) == [7, 6]
+
+
+def test_victim_never_preempts_live_request():
+    """Under pressure the engine reclaims parked chains instead of
+    preempting live requests: a pool sized so wave 2 only fits if wave
+    1's parked chain is evicted must finish with zero preemptions."""
+    eng = _engine(victim=True, num_blocks=10)
+    _run(eng, [_prompt(4)])
+    assert len(eng.scheduler.layout.victim) > 0
+    _run(eng, [_prompt(5, n=40)], max_new=16)
+    stats = eng.stats()
+    assert stats["victim_evictions"] > 0
+    assert stats["preemptions"] == 0, \
+        "idle cached prefix evicted a live request"
+
+
+def test_make_victim_eviction_registry():
+    assert isinstance(make_victim_eviction("lru"), LruEviction)
+    assert isinstance(make_victim_eviction("weighted-lru"),
+                      WeightedLruEviction)
+    custom = LruEviction()
+    assert make_victim_eviction(custom) is custom
+    with pytest.raises(ValueError, match="not in"):
+        make_victim_eviction("nope")
+
+
+# -- restart persistence ----------------------------------------------------
+
+def test_save_restore_round_trip_bit_identical(tmp_path):
+    """Warm pool -> checkpoint -> fresh engine -> restore: the replay
+    resolves against restored blocks (victim_hits > 0 on an engine that
+    never served the prompts) and tokens match the warm engine's."""
+    prompts = [_prompt(6), _prompt(7, n=24)]
+    tenants = ["a", "b"]
+    e1 = _engine(victim=True)
+    warm = _run(e1, prompts, tenants)
+    snap1 = e1.snapshot()["prefix_cache"]
+    path = os.fspath(tmp_path / "pc.npz")
+    e1.save_prefix_cache(path)
+    assert os.path.exists(path) and os.path.exists(
+        path + ".meta.json")
+
+    e2 = _engine(victim=True)
+    e2.restore_prefix_cache(path)
+    snap2 = e2.snapshot()["prefix_cache"]
+    assert snap2["victim_blocks"] == snap1["victim_blocks"] > 0
+    assert snap2["per_tenant_bytes"] == snap1["per_tenant_bytes"]
+    e2.scheduler.layout.check(set(), 4)
+    replay = _run(e2, prompts, tenants)
+    snap3 = e2.snapshot()["prefix_cache"]
+    assert snap3["victim_hits"] > 0, snap3
+    for a, b in zip(warm, replay):
+        assert np.array_equal(a, b), "restored K/V diverged from warm run"
+
+
+def test_restore_rejects_mismatched_geometry(tmp_path):
+    """A checkpoint written under one model/block geometry must refuse
+    to load into another instead of silently corrupting the pool."""
+    e1 = _engine(victim=True)
+    _run(e1, [_prompt(8)])
+    path = os.fspath(tmp_path / "pc.npz")
+    e1.save_prefix_cache(path)
+    e2 = Engine(CFG, PARAMS, EngineConfig(
+        max_slots=4, max_len=64, kv_layout="paged", block_size=4,
+        num_blocks=48, prefix_cache=True, victim_cache=True,
+        greedy=True, seed=0, debug=True))
+    with pytest.raises(ValueError, match="block_size"):
+        e2.restore_prefix_cache(path)
+
+
+def test_restore_into_small_pool_degrades_gracefully(tmp_path):
+    """Restoring into a pool too small for the full checkpoint loads
+    what fits (respecting quotas) and stays invariant-clean."""
+    e1 = _engine(victim=True)
+    _run(e1, [_prompt(9), _prompt(10, n=32)], ["a", "b"])
+    path = os.fspath(tmp_path / "pc.npz")
+    e1.save_prefix_cache(path)
+    e2 = _engine(victim=True, num_blocks=6)    # 5 usable blocks
+    e2.restore_prefix_cache(path)
+    lay = e2.scheduler.layout
+    assert 0 < len(lay.victim) <= 5
+    lay.check(set(), 4)
+    _run(e2, [_prompt(9)], ["a"])              # still serves correctly
+    lay.check(set(), 4)
+
+
+# -- tenant quotas and isolation --------------------------------------------
+
+def test_quota_breach_evicts_only_breaching_tenant():
+    """Tenant A's budget covers one block; parking a 3-block chain must
+    trim A down to budget while B's parked chain is untouched."""
+    quota = {"a": BLOCK * ROW_BYTES, "b": 10 * BLOCK * ROW_BYTES}
+    eng = _engine(victim=True, tenants=quota)
+    _run(eng, [_prompt(11, n=24)], ["b"])      # B parks 3 blocks
+    lay = eng.scheduler.layout
+    b_blocks = set(lay.victim.blocks)
+    _run(eng, [_prompt(12, n=24)], ["a"])      # A parks 3, trimmed to 1
+    per = lay.victim.per_tenant_bytes()
+    assert per["a"] <= quota["a"], per
+    assert set(lay.victim.blocks) >= b_blocks, \
+        "quota enforcement evicted another tenant's chains"
+    assert lay.victim_evictions == 2
+    lay.check(set(), 4)
+
+
+def test_identical_prompts_never_share_across_tenants():
+    """The same token sequence under two tenants must resolve to
+    disjoint block sets — a hash hit may never map another tenant's
+    K/V — while within a tenant the second request does share."""
+    p = _prompt(13)
+    eng = _engine(victim=True)
+    _run(eng, [p], ["a"])
+    lay = eng.scheduler.layout
+    a_blocks = set(lay.victim.blocks)
+    assert lay.match_prefix(p, tenant="b") == ([], 0), \
+        "cross-tenant prefix resolution"
+    blks, _ = lay.match_prefix(p, tenant="a")
+    assert blks and set(blks) <= a_blocks
+    _run(eng, [p], ["b"])
+    ab = lay.victim.per_tenant_bytes()
+    assert ab.get("a") and ab.get("b")
+    tenants = {lay._block_tenant[b] for b in lay.victim.blocks}
+    assert tenants == {"a", "b"}
+    lay.check(set(), 4)
+
+
+def test_victim_requires_prefix_cache():
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(CFG, PARAMS, EngineConfig(
+            max_slots=2, max_len=64, kv_layout="paged", block_size=BLOCK,
+            num_blocks=16, prefix_cache=False, victim_cache=True))

@@ -303,3 +303,49 @@ def test_server_rejects_batch_engine(setup):
     eng = Engine(cfg, params, EngineConfig(max_len=64, admission="batch"))
     with pytest.raises(ValueError, match="batch"):
         EngineServer(eng)
+
+
+def test_multi_tenant_victim_cache_over_http(setup):
+    """The prefix-cache service over the wire: two tenants post the same
+    prompt twice each; /status exposes per-tenant pool occupancy, the
+    second round registers cross-request victim hits, and a bad tenant
+    field is a 400."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=64, max_slots=2, kv_layout="paged", block_size=8,
+        num_blocks=24, prefix_cache=True, victim_cache=True,
+        prefix_cache_tenants={"acme": 1 << 20, "globex": 1 << 20},
+        debug=True))
+    prompt = [int(t) for t in np.random.RandomState(11).randint(1, 64, 20)]
+    with EngineServer(eng, ServerConfig(port=0, max_inflight=3)) as srv:
+        status, out = _generate(srv, {"prompt": prompt, "tenant": 7})
+        assert status == 400 and "tenant" in out["error"]
+        first = {}
+        for tenant in ("acme", "globex"):
+            status, out = _generate(srv, {"prompt": prompt,
+                                          "max_new_tokens": 6,
+                                          "tenant": tenant})
+            assert status == 200
+            first[tenant] = out["tokens"]
+        # identical prompts under different tenants: same greedy tokens,
+        # but the pool holds a separate copy per namespace
+        assert first["acme"] == first["globex"]
+        status, _, raw = _request(srv, "GET", "/status")
+        pc = json.loads(raw)["prefix_cache"]
+        assert status == 200 and pc["enabled"] and pc["victim_cache"]
+        per = pc["per_tenant_bytes"]
+        assert per.get("acme", 0) > 0 and per.get("globex", 0) > 0
+        assert pc["tenant_quotas"] == {"acme": 1 << 20, "globex": 1 << 20}
+        before = pc["victim_hits"]
+        for tenant in ("acme", "globex"):
+            status, out = _generate(srv, {"prompt": prompt,
+                                          "max_new_tokens": 6,
+                                          "tenant": tenant})
+            assert status == 200
+            assert out["tokens"] == first[tenant], \
+                "cache hit changed the tokens"
+        status, _, raw = _request(srv, "GET", "/status")
+        pc = json.loads(raw)["prefix_cache"]
+        assert pc["victim_hits"] > before, \
+            "second round never hit the parked chains"
+        assert pc["prefill_tokens_saved"] > 0 and pc["bytes_saved"] > 0
